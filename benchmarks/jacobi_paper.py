@@ -1,0 +1,63 @@
+"""Paper Fig. 3 reproduction: parallel Jacobi, framework vs tailored.
+
+Paper setup: sizes 2709², 4209², 7209², 500 iterations; framework runtimes
+"vary (mean value) around 10 % from the runtime of an efficient MPI
+implementation".  Here: HyPar LocalExecutor (scheduler dispatch per
+iteration, the paper-faithful path) vs a fused jitted while_loop (the
+tailored stand-in), plus the beyond-paper SPMD-fused variant which removes
+the host round-trip the paper's design pays per dynamic-job iteration.
+
+CPU wall-times are not TPU wall-times, but the *ratio* framework/tailored
+is the paper's claim and is hardware-meaningful (dispatch overhead /
+compute).
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.apps.jacobi import (jacobi_hypar, jacobi_spmd, jacobi_tailored,
+                               make_system)
+
+SIZES = (2709, 4209, 7209)
+ITERS = 500
+
+
+def run(sizes=SIZES, iters=ITERS, *, n_chunks: int = 4) -> list[dict]:
+    rows = []
+    for n in sizes:
+        A, b, x_true = make_system(n)
+        rt = jacobi_tailored(A, b, iters=iters, tol=0.0)
+        rh = jacobi_hypar(A, b, iters=iters, tol=0.0, n_chunks=n_chunks)
+        rs = jacobi_spmd(A, b, iters=iters, tol=0.0)
+        err_h = float(np.max(np.abs(rh.x - rt.x)))
+        rows.append({
+            "n": n, "iters": iters,
+            "tailored_s": rt.seconds, "hypar_s": rh.seconds,
+            "spmd_s": rs.seconds,
+            "overhead_pct": 100.0 * (rh.seconds / rt.seconds - 1.0),
+            "spmd_overhead_pct": 100.0 * (rs.seconds / rt.seconds - 1.0),
+            "max_diff_vs_tailored": err_h,
+        })
+        r = rows[-1]
+        print(f"n={n}: tailored {rt.seconds:.2f}s | hypar {rh.seconds:.2f}s "
+              f"({r['overhead_pct']:+.1f}%) | spmd-fused {rs.seconds:.2f}s "
+              f"({r['spmd_overhead_pct']:+.1f}%) | Δx {err_h:.1e}")
+    mean = float(np.mean([r["overhead_pct"] for r in rows]))
+    print(f"mean framework overhead: {mean:+.1f}%  (paper: ~10 %)")
+    return rows
+
+
+def main(out: str | None = None, quick: bool = False):
+    rows = run(sizes=(512, 1024) if quick else SIZES,
+               iters=100 if quick else ITERS)
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

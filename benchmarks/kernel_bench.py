@@ -1,0 +1,66 @@
+"""Per-kernel microbenchmarks (CPU reference path timings + interpret-mode
+correctness cost).  On real TPU hardware the same harness times the Pallas
+path; numbers here calibrate the CPU oracle and catch perf regressions in
+the jnp reference implementations the dry-run lowers."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.jacobi_sweep.ops import jacobi_sweep
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.ssd_scan.ops import ssd_intra_chunk
+
+
+def _time(fn, *args, iters=5, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run() -> list[tuple[str, float, str]]:
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    rows = []
+
+    B, S, H, KV, D = 1, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+    us = _time(flash_attention, q, k, v, impl="ref")
+    flops = 2 * 2 * B * H * S * S // 2 * D
+    rows.append(("flash_attention_ref_1k", us, f"{flops/us/1e3:.1f}GF/s"))
+
+    BC, Hs, Q, P, N = 8, 8, 128, 64, 64
+    xh = jax.random.normal(ks[3], (BC, Hs, Q, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (BC, Hs, Q, 1)))
+    a = -dt * 0.5
+    Bm = jax.random.normal(ks[5], (BC, Q, N))
+    Cm = jax.random.normal(ks[6], (BC, Q, N))
+    us = _time(ssd_intra_chunk, xh, dt, a, Bm, Cm, impl="ref")
+    rows.append(("ssd_intra_chunk_ref", us, f"Q={Q},P={P},N={N}"))
+
+    x = jax.random.normal(ks[0], (4096, 1024), jnp.float32)
+    g = jnp.ones((1024,))
+    us = _time(rmsnorm, x, g, impl="ref")
+    rows.append(("rmsnorm_ref_4kx1k", us,
+                 f"{x.size*4*2/us/1e3:.1f}GB/s"))
+
+    n = 2048
+    A = jax.random.normal(ks[1], (n, n)) / n + jnp.eye(n) * 3
+    xx = jax.random.normal(ks[2], (n,))
+    b = jax.random.normal(ks[3], (n,))
+    us = _time(jacobi_sweep, A, xx, b, jnp.diag(A), impl="ref")
+    rows.append(("jacobi_sweep_ref_2k", us, f"{2*n*n/us/1e3:.1f}GF/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

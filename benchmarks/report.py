@@ -1,0 +1,57 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun.jsonl."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path="benchmarks/results/dryrun.jsonl"):
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def ms(s):
+    return f"{s*1e3:.1f}"
+
+
+def dryrun_table(rows):
+    out = ["| arch | cell | mesh | compile s | accum | GiB/dev | fits 16G | collectives (AR/AG/RS/A2A/CP) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        c = r["collective_counts"]
+        cc = "/".join(str(c.get(k, 0)) for k in
+                      ("all-reduce", "all-gather", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {r['mesh']} | {r['compile_s']} | "
+            f"{r['grad_accum']} | {fmt_bytes(r['bytes_per_device'])} | "
+            f"{'yes' if r['fits_hbm'] else '**NO**'} | {cc} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows, mesh="16x16"):
+    out = ["| arch | cell | compute ms | memory ms | collective ms | dominant | "
+           "MODEL_FLOPS | useful % | roofline frac % |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['cell']} | {ms(r['compute_s'])} | "
+            f"{ms(r['memory_s'])} | {ms(r['collective_s'])} | {r['dominant']} | "
+            f"{r['model_flops']:.2e} | {100*r['useful_ratio']:.1f} | "
+            f"{100*r['roofline_fraction']:.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = load(sys.argv[1] if len(sys.argv) > 1 else
+                "benchmarks/results/dryrun.jsonl")
+    print("## Dry-run\n")
+    print(dryrun_table(rows))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(rows))

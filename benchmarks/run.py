@@ -1,0 +1,67 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure
+plus framework-level measurements.  Prints ``name,us_per_call,derived``
+CSV rows (plus the detailed per-benchmark output above them).
+
+  jacobi_fig3      — the paper's only results figure (Fig. 3): framework vs
+                     tailored Jacobi at 3 sizes × 500 iterations (default
+                     sizes shrink for CI; pass ``--paper`` for 2709/4209/7209
+                     × 500 as in the paper).
+  hypar_lm         — the same framework-vs-tailored claim on the LM
+                     training workload (this framework's primary domain)
+  kernels          — per-kernel microbenchmarks
+  roofline         — summarises the dry-run roofline table if
+                     benchmarks/results/dryrun.jsonl exists (produced by
+                     ``python -m repro.launch.dryrun --all``)
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def main() -> None:
+    quick = "--paper" not in sys.argv
+    rows: list[tuple[str, float, str]] = []
+
+    print("== jacobi_fig3 (paper Fig. 3) ==")
+    from . import jacobi_paper
+    jrows = jacobi_paper.main(quick=quick)
+    for r in jrows:
+        rows.append((f"jacobi_n{r['n']}_tailored", r["tailored_s"] * 1e6 / r["iters"],
+                     "us/iter"))
+        rows.append((f"jacobi_n{r['n']}_hypar", r["hypar_s"] * 1e6 / r["iters"],
+                     f"overhead={r['overhead_pct']:+.1f}%"))
+        rows.append((f"jacobi_n{r['n']}_spmdfused", r["spmd_s"] * 1e6 / r["iters"],
+                     f"overhead={r['spmd_overhead_pct']:+.1f}%"))
+
+    print("\n== hypar_lm (framework vs tailored, LM training) ==")
+    from . import hypar_overhead
+    h = hypar_overhead.run(steps=4 if quick else 10)
+    rows.append(("hypar_lm_tailored", h["tailored_s"] * 1e6, "total"))
+    rows.append(("hypar_lm_framework", h["hypar_s"] * 1e6,
+                 f"overhead={h['overhead_pct']:+.1f}%"))
+
+    print("\n== kernels ==")
+    from . import kernel_bench
+    for name, us, derived in kernel_bench.run():
+        rows.append((name, us, derived))
+
+    results = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
+    if os.path.exists(results):
+        print("\n== roofline (from dry-run) ==")
+        with open(results) as f:
+            recs = [json.loads(l) for l in f if l.strip()]
+        for r in recs:
+            key = f"roofline_{r['arch']}_{r['cell']}_{r['mesh']}"
+            step_ms = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e3
+            rows.append((key, step_ms * 1e3,
+                         f"dom={r['dominant']},frac={r['roofline_fraction']*100:.1f}%"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

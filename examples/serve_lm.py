@@ -1,0 +1,12 @@
+"""Batched serving example: prefill + decode with continuous batching on a
+reduced config of an assigned architecture.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-370m]
+"""
+import sys
+
+from repro.launch.serve import main
+
+args = ["--arch", "qwen2-1.5b", "--smoke", "--batch", "4",
+        "--prompt-len", "16", "--max-new", "16", "--requests", "2"]
+main(args + sys.argv[1:])

@@ -1,0 +1,15 @@
+"""End-to-end training driver: a ~100M-parameter qwen2-family model for a
+few hundred steps on synthetic data, with checkpointing.
+
+Run:  PYTHONPATH=src python examples/train_lm.py  (add --steps 300 for the
+full run; defaults stay small so the example finishes quickly on CPU)
+"""
+import sys
+
+from repro.launch.train import main
+
+args = ["--arch", "qwen2-1.5b", "--layers", "8", "--d-model", "768",
+        "--steps", "60", "--batch", "8", "--seq", "256",
+        "--ckpt-dir", "/tmp/repro_train_lm", "--ckpt-every", "50",
+        "--log-every", "10"]
+main(args + sys.argv[1:])

@@ -1,0 +1,2 @@
+from .hlo import HloAnalysis, analyze_hlo
+from .roofline import RooflineTerms, roofline_from_compiled, V5E

@@ -1,0 +1,104 @@
+"""Three-term roofline model from a compiled dry-run artifact.
+
+    compute_s    = HLO_FLOPs / (chips x peak_FLOPs)
+    memory_s     = HLO_bytes / (chips x HBM_bw)
+    collective_s = collective_bytes / (chips x link_bw)
+
+HLO terms come from the HLO-text analyzer (scan-corrected, per-device after
+SPMD partitioning: as_text() of a partitioned module reports per-device
+shapes, so terms are divided by ONE chip's peaks, not the fleet's).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from .hlo import HloAnalysis, analyze_hlo
+
+__all__ = ["HW", "V5E", "RooflineTerms", "roofline_from_compiled"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # B/s per chip
+    ici_bw: float              # B/s per link
+    hbm_bytes: float           # capacity per chip
+
+
+V5E = HW(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9,
+         hbm_bytes=16 * 2**30)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    traffic_bytes: float
+    collective_bytes: float
+    model_flops: float = 0.0
+    analysis: Any = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-per-chip / peak, achieved at the bound step time —
+        i.e. projected MFU if the dominant term is the only limiter."""
+        if self.step_s <= 0:
+            return 0.0
+        return (self.model_flops_per_chip / self.step_s) / self._hw.peak_flops
+
+    def row(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops": self.flops, "traffic_bytes": self.traffic_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_flops_ratio,
+        }
+
+
+def roofline_from_compiled(compiled, *, hw: HW = V5E, n_chips: int,
+                           model_flops: float = 0.0,
+                           trip_overrides: dict | None = None,
+                           default_trips: int = 1) -> RooflineTerms:
+    """``compiled``: jax.stages.Compiled for an SPMD-partitioned module.
+
+    The partitioned HLO is per-device, so terms use single-chip peaks;
+    ``model_flops`` is the GLOBAL useful-FLOPs figure (6·N·D etc.) and is
+    divided by ``n_chips`` for the per-chip fraction.
+    """
+    text = compiled.as_text()
+    an = analyze_hlo(text, default_trips=default_trips,
+                     trip_overrides=trip_overrides)
+    terms = RooflineTerms(
+        compute_s=an.flops / hw.peak_flops,
+        memory_s=an.traffic_bytes / hw.hbm_bw,
+        collective_s=an.collectives.total_bytes / hw.ici_bw,
+        flops=an.flops,
+        traffic_bytes=an.traffic_bytes,
+        collective_bytes=an.collectives.total_bytes,
+        model_flops=model_flops,
+        analysis=an,
+    )
+    terms._hw = hw
+    terms.model_flops_per_chip = model_flops / max(n_chips, 1)
+    return terms

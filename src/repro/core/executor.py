@@ -1,0 +1,429 @@
+"""Executors — how job graphs actually run.
+
+Two backends (DESIGN.md §2):
+
+* :class:`LocalExecutor` — the *paper-faithful* runtime.  Workers are pinned
+  to individual JAX devices; jobs are dispatched one by one following the
+  master scheduler's placement plan; chunk transfers between devices are
+  explicit (and accounted), ``no_send_back`` results stay on their worker's
+  device.  Worker failures lose retained results, which are recovered by
+  re-executing the producing jobs from the graph (lineage recovery).
+  Dynamic jobs (control functions) are handled on the host, exactly like the
+  paper's master re-enqueueing mechanism.
+
+* :class:`SpmdExecutor` — the *beyond-paper* runtime for TPU pods.  A whole
+  parallel segment is fused into one SPMD computation: same-function
+  chunkwise jobs are batched over a stacked chunk axis and sharded across
+  the mesh (the generalisation of the paper's worker co-scheduling), and
+  GSPMD inserts the collectives the paper's schedulers would have sent as
+  messages.  Self-re-enqueueing iterative patterns (the Jacobi J3) are fused
+  into a single on-device ``lax.while_loop``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .job import ChunkedData, ChunkRef, DataChunk, GraphValidationError, Job, JobGraph
+from .registry import ControlContext, FunctionKind, FunctionRegistry
+from .scheduler import (MasterScheduler, Placement, ResultStore, VirtualCluster,
+                        Worker)
+
+__all__ = [
+    "ExecutionReport",
+    "LocalExecutor",
+    "SpmdExecutor",
+    "IterativeSpec",
+]
+
+
+# ---------------------------------------------------------------------------
+# Reporting / monitoring (paper future work §5: "basic monitoring")
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SegmentReport:
+    index: int
+    jobs: list[str] = dataclasses.field(default_factory=list)
+    moved_bytes: int = 0
+    local_bytes: int = 0
+    co_scheduled: list[tuple[str, ...]] = dataclasses.field(default_factory=list)
+    recovered_jobs: list[str] = dataclasses.field(default_factory=list)
+    speculated_jobs: list[str] = dataclasses.field(default_factory=list)
+    sim_makespan: float = 0.0
+    wall_time: float = 0.0
+
+
+@dataclasses.dataclass
+class ExecutionReport:
+    segments: list[SegmentReport] = dataclasses.field(default_factory=list)
+    dynamic_jobs_added: int = 0
+
+    @property
+    def moved_bytes(self) -> int:
+        return sum(s.moved_bytes for s in self.segments)
+
+    @property
+    def local_bytes(self) -> int:
+        return sum(s.local_bytes for s in self.segments)
+
+    @property
+    def recovered_jobs(self) -> list[str]:
+        return [j for s in self.segments for j in s.recovered_jobs]
+
+    def summary(self) -> str:
+        return (f"segments={len(self.segments)} moved={self.moved_bytes}B "
+                f"local={self.local_bytes}B dynamic={self.dynamic_jobs_added} "
+                f"recovered={len(self.recovered_jobs)}")
+
+
+# ---------------------------------------------------------------------------
+# Local (paper-faithful) executor
+# ---------------------------------------------------------------------------
+
+
+class LocalExecutor:
+    """Dispatch jobs to per-device workers following the placement plan."""
+
+    def __init__(self, cluster: VirtualCluster, registry: FunctionRegistry, *,
+                 speculative_slowdown_threshold: float = 2.0,
+                 block_per_job: bool = False):
+        self.cluster = cluster
+        self.registry = registry
+        self.store = ResultStore(cluster)
+        self.speculative_slowdown_threshold = speculative_slowdown_threshold
+        # paper semantics: the barrier is at SEGMENT granularity — jobs are
+        # dispatched asynchronously and the scheduler waits once per segment
+        # (block_per_job=True restores per-job waits for precise worker
+        # timing, e.g. in straggler experiments)
+        self.block_per_job = block_per_job
+        self._jit_cache: dict[Any, Callable] = {}
+
+    # -- plumbing ----------------------------------------------------------------
+    def _jitted(self, fid) -> Callable:
+        if fid not in self._jit_cache:
+            self._jit_cache[fid] = jax.jit(self.registry[fid].fn)
+        return self._jit_cache[fid]
+
+    def _resolve_inputs(self, job: Job, graph: JobGraph, report: SegmentReport,
+                        worker: Worker) -> list[ChunkedData]:
+        """Fetch each input ref, moving chunks to the worker's device.
+
+        Lost results (dead worker + no_send_back) trigger lineage recovery:
+        the producing job is re-executed (paper §3.1 names exactly this
+        recompute cost as the drawback of result retention).
+        """
+        inputs: list[ChunkedData] = []
+        for ref in job.inputs:
+            rec = self.store.records.get(ref.job)
+            if rec is None or rec.data is None:
+                self._recover(ref.job, graph, report)
+                rec = self.store.get(ref.job)
+            sel = ref.select(rec.data)
+            moved = []
+            for c in sel:
+                src_dev = (c.data.devices().pop()
+                           if isinstance(c.data, jax.Array) and c.data.devices() else None)
+                if src_dev is not None and src_dev != worker.device:
+                    report.moved_bytes += c.nbytes
+                    moved.append(DataChunk(jax.device_put(c.data, worker.device)))
+                else:
+                    report.local_bytes += c.nbytes
+                    moved.append(c)
+            inputs.append(ChunkedData(moved))
+        if job.name in graph.bound_inputs:
+            data = graph.bound_inputs[job.name]
+            moved = []
+            for c in data:
+                on_dev = (isinstance(c.data, jax.Array) and c.data.devices()
+                          and c.data.devices().pop() == worker.device)
+                moved.append(c if on_dev
+                             else DataChunk(jax.device_put(c.data, worker.device)))
+            inputs.insert(0, ChunkedData(moved))
+        return inputs
+
+    def _recover(self, name: str, graph: JobGraph, report: SegmentReport) -> None:
+        """Re-execute a job whose result was lost (recursively)."""
+        job = graph.job(name)
+        # choose any alive worker (fresh placement — the original is dead)
+        alive = self.cluster.alive_workers()
+        if not alive:
+            worker = self.cluster.spawn_worker()
+        else:
+            worker = min(alive, key=lambda w: w.jobs_done)
+        report.recovered_jobs.append(name)
+        self._execute_on(job, worker, graph, report)
+
+    # -- execution ----------------------------------------------------------------
+    def _execute_on(self, job: Job, worker: Worker, graph: JobGraph,
+                    report: SegmentReport,
+                    ctx: ControlContext | None = None) -> ChunkedData:
+        rf = self.registry[job.fn]
+        inputs = self._resolve_inputs(job, graph, report, worker)
+        t0 = time.perf_counter()
+        if rf.kind == FunctionKind.CHUNKWISE:
+            if not inputs:
+                raise GraphValidationError(
+                    f"{job.name}: chunkwise function {job.fn!r} needs input chunks")
+            fn = self._jitted(job.fn)
+            zipped = list(zip(*[cd.arrays() for cd in inputs]))
+            out_chunks = [DataChunk(fn(*args)) for args in zipped]
+            out = ChunkedData(out_chunks)
+        elif rf.kind == FunctionKind.WHOLE:
+            out = rf.fn(*inputs)
+            if not isinstance(out, ChunkedData):
+                out = ChunkedData.from_arrays(
+                    out if isinstance(out, (list, tuple)) else [out])
+        elif rf.kind == FunctionKind.CONTROL:
+            if ctx is None:
+                ctx = ControlContext(graph, job.segment)
+            host_inputs = [ChunkedData([DataChunk(np.asarray(c.data)) for c in cd])
+                           for cd in inputs]
+            out = rf.fn(*host_inputs, ctx)
+            if out is None:
+                out = ChunkedData([])
+            elif not isinstance(out, ChunkedData):
+                out = ChunkedData.from_arrays(
+                    out if isinstance(out, (list, tuple)) else [out])
+            for new_job, seg_idx in ctx.added:
+                graph.add_dynamic(new_job, seg_idx, current=job.segment)
+        else:  # pragma: no cover
+            raise GraphValidationError(f"unknown kind {rf.kind}")
+        if self.block_per_job:
+            for c in out:
+                if isinstance(c.data, jax.Array):
+                    c.data.block_until_ready()
+        elapsed = time.perf_counter() - t0
+        worker.jobs_done += 1
+        self.store.put(job, out, worker)
+        return out, elapsed
+
+    def run(self, graph: JobGraph, *, release_consumed: bool = False) -> tuple[dict, ExecutionReport]:
+        """Execute the whole graph; returns (results by job name, report).
+
+        ``release_consumed`` — after a segment completes, release results
+        whose every consumer has already run (the paper's scheduler "signals
+        them the data is no longer required").
+        """
+        report = ExecutionReport()
+        master = MasterScheduler(graph, self.cluster)
+        seg_idx = 0
+        while seg_idx < len(graph.segments):
+            segment = graph.segments[seg_idx]
+            sreport = SegmentReport(index=seg_idx, jobs=list(segment.names()))
+            t0 = time.perf_counter()
+            placements = master.plan_segment(segment.jobs, self.store)
+            worker_time: dict[int, float] = {}
+            n_dynamic_before = sum(len(s) for s in graph.segments)
+            for p in placements:
+                if p.co_scheduled_with:
+                    sreport.co_scheduled.append((p.job.name,) + p.co_scheduled_with)
+                worker = p.worker
+                ctx = ControlContext(graph, seg_idx)
+                # straggler mitigation: speculatively duplicate on a faster
+                # worker when the chosen one is degraded
+                if (worker.slowdown >= self.speculative_slowdown_threshold
+                        and len(self.cluster.alive_workers()) > 1):
+                    fast = min((w for w in self.cluster.alive_workers()
+                                if w.wid != worker.wid),
+                               key=lambda w: w.slowdown)
+                    if fast.slowdown < worker.slowdown:
+                        sreport.speculated_jobs.append(p.job.name)
+                        worker = fast
+                _, elapsed = self._execute_on(p.job, worker, graph, sreport, ctx)
+                worker_time[worker.wid] = worker_time.get(worker.wid, 0.0) \
+                    + elapsed * worker.slowdown
+            n_dynamic_after = sum(len(s) for s in graph.segments)
+            report.dynamic_jobs_added += max(0, n_dynamic_after - n_dynamic_before
+                                             - 0)
+            if not self.block_per_job:
+                # paper's segment barrier: wait for every job of the segment
+                for p in placements:
+                    rec = self.store.records.get(p.job.name)
+                    if rec is not None and rec.data is not None:
+                        for c in rec.data:
+                            if isinstance(c.data, jax.Array):
+                                c.data.block_until_ready()
+            sreport.sim_makespan = max(worker_time.values(), default=0.0)
+            sreport.wall_time = time.perf_counter() - t0
+            report.segments.append(sreport)
+            if release_consumed:
+                self._release_dead_results(graph, seg_idx)
+            seg_idx += 1
+        results = {name: rec.data for name, rec in self.store.records.items()
+                   if rec.data is not None}
+        return results, report
+
+    def _release_dead_results(self, graph: JobGraph, done_segment: int) -> None:
+        for name, rec in self.store.records.items():
+            if rec.data is None:
+                continue
+            consumers = graph.consumers(name)
+            if consumers and all(c.segment <= done_segment and
+                                 c.name in self.store.records for c in consumers):
+                self.store.release(name)
+
+
+# ---------------------------------------------------------------------------
+# SPMD (fused) executor — beyond-paper optimisation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class IterativeSpec:
+    """A self-re-enqueueing segment group (the paper's dynamic-job loop),
+    declared explicitly so it can be fused to ``lax.while_loop``.
+
+    ``body``  — f(carry) -> carry, the fused body of the repeated segments
+    ``cond``  — f(carry) -> bool scalar
+    ``max_iters`` — safety bound (the paper requires a *finite* number of
+                    dynamic additions)
+    """
+
+    body: Callable
+    cond: Callable
+    max_iters: int = 10_000
+
+
+class SpmdExecutor:
+    """Fuse segments into SPMD computations over a device mesh.
+
+    Same-function chunkwise job groups in a segment are stacked over the
+    chunk axis and executed as ONE sharded computation (`vmap` over chunks,
+    chunk axis sharded over the mesh's data axes).  ``no_send_back`` keeps
+    outputs sharded in place; sent-back results are gathered (replicated) —
+    exactly the communication the paper's workers would perform, but
+    expressed as collectives that XLA can schedule/overlap.
+    """
+
+    def __init__(self, mesh: jax.sharding.Mesh, registry: FunctionRegistry, *,
+                 chunk_axes: tuple[str, ...] | None = None):
+        self.mesh = mesh
+        self.registry = registry
+        # chunk axis = all mesh axes by default (fully sharded chunk axis)
+        self.chunk_axes = chunk_axes if chunk_axes is not None else tuple(mesh.axis_names)
+        self.results: dict[str, Any] = {}     # job name -> stacked array(s)
+        self._compiled: dict[Any, Callable] = {}
+
+    # -- sharding helpers --------------------------------------------------------
+    def _chunk_sharding(self, n_chunks: int):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        axes = []
+        size = 1
+        for a in self.chunk_axes:
+            s = self.mesh.shape[a]
+            if n_chunks % (size * s) == 0:
+                axes.append(a)
+                size *= s
+            else:
+                break
+        spec = P(tuple(axes)) if axes else P()
+        return NamedSharding(self.mesh, spec)
+
+    def _replicated(self):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return NamedSharding(self.mesh, P())
+
+    # -- execution ----------------------------------------------------------------
+    def _stacked_input(self, job: Job, graph: JobGraph) -> list[Any]:
+        arrs = []
+        if job.name in graph.bound_inputs:
+            cd = graph.bound_inputs[job.name]
+            arrs.append(jnp.stack(cd.arrays()))
+        for ref in job.inputs:
+            if ref.job not in self.results:
+                raise GraphValidationError(f"{job.name}: missing result {ref.job}")
+            val = self.results[ref.job]
+            if not ref.whole:
+                val = val[ref.lo:ref.hi]
+            arrs.append(val)
+        return arrs
+
+    def _fused_chunkwise(self, fid, n_chunks: int, send_back: bool):
+        key = (fid, n_chunks, send_back)
+        if key not in self._compiled:
+            fn = self.registry[fid].fn
+            out_sh = self._replicated() if send_back else self._chunk_sharding(n_chunks)
+            self._compiled[key] = jax.jit(
+                jax.vmap(fn),
+                in_shardings=None,   # let GSPMD propagate from operands
+                out_shardings=out_sh)
+        return self._compiled[key]
+
+    def run(self, graph: JobGraph) -> dict[str, Any]:
+        for seg_idx, segment in enumerate(graph.segments):
+            # group same-function chunkwise jobs (worker co-scheduling,
+            # generalised: ONE sharded call executes the whole group)
+            groups: dict[Any, list[Job]] = {}
+            singles: list[Job] = []
+            for job in segment.jobs:
+                rf = self.registry[job.fn]
+                if rf.kind == FunctionKind.CHUNKWISE:
+                    groups.setdefault(job.fn, []).append(job)
+                else:
+                    singles.append(job)
+            for fid, jobs in groups.items():
+                ins = [self._stacked_input(j, graph) for j in jobs]
+                counts = [i[0].shape[0] for i in ins]
+                stacked = [jnp.concatenate([i[k] for i in ins], axis=0)
+                           for k in range(len(ins[0]))]
+                send_back = not all(j.no_send_back for j in jobs)
+                fused = self._fused_chunkwise(fid, int(sum(counts)), send_back)
+                out = fused(*stacked)
+                # split the fused result back to per-job results
+                off = 0
+                for j, c in zip(jobs, counts):
+                    self.results[j.name] = out[off:off + c]
+                    off += c
+            for job in singles:
+                rf = self.registry[job.fn]
+                ins = self._stacked_input(job, graph)
+                if rf.kind == FunctionKind.WHOLE:
+                    out = rf.fn(*[ChunkedData.from_arrays(list(a)) for a in ins])
+                    self.results[job.name] = jnp.stack(out.arrays())
+                elif rf.kind == FunctionKind.CONTROL:
+                    ctx = ControlContext(graph, seg_idx)
+                    host_ins = [ChunkedData.from_arrays([np.asarray(x) for x in a])
+                                for a in ins]
+                    out = rf.fn(*host_ins, ctx)
+                    self.results[job.name] = (jnp.stack(out.arrays())
+                                              if out is not None and len(out) else jnp.zeros((0,)))
+                    for new_job, tgt in ctx.added:
+                        graph.add_dynamic(new_job, tgt, current=seg_idx)
+                else:  # pragma: no cover
+                    raise GraphValidationError(f"unsupported kind {rf.kind}")
+        return dict(self.results)
+
+    # -- iterative fusion (beyond-paper: dynamic-job loop -> while_loop) --------
+    def run_iterative(self, spec: IterativeSpec, carry):
+        """Fuse a convergence loop on device.
+
+        The paper expresses iteration by letting a control job re-enqueue the
+        body segments; host round-trips per iteration are the price.  On TPU
+        we fuse body+condition into one ``lax.while_loop`` so the loop never
+        leaves the device.  Both paths are benchmarked in
+        ``benchmarks/jacobi_paper.py``.
+        """
+        key = ("iterative", id(spec))
+        if key not in self._compiled:
+            it = jnp.zeros((), jnp.int32)
+
+            def cond(state):
+                i, c = state
+                return jnp.logical_and(i < spec.max_iters, spec.cond(c))
+
+            def body(state):
+                i, c = state
+                return i + 1, spec.body(c)
+
+            self._compiled[key] = jax.jit(
+                lambda c: jax.lax.while_loop(cond, body, (it, c)))
+        n_iters, final = self._compiled[key](carry)
+        return final, int(n_iters)

@@ -1,0 +1,121 @@
+"""Fault tolerance & monitoring (the paper's §5 "future work", implemented).
+
+The paper identifies the cost of its ``no_send_back`` optimisation: "in case
+a worker has to be shut down, all results computed so far are lost and have
+to be re-computed".  This module provides:
+
+* :class:`FaultInjector` — deterministic worker-failure injection for tests
+  and chaos runs (kill after N jobs / before segment K / explicit kill).
+* :class:`Heartbeat` — liveness tracking; a worker that misses
+  ``max_missed`` beats is declared dead and its retained results are
+  invalidated (triggering lineage recovery in the LocalExecutor).
+* :class:`ChaosLocalExecutor` — a LocalExecutor that consults the injector
+  around every job execution, exercising the recovery path end-to-end.
+
+At pod scale the same policy applies one level up: a lost *host* invalidates
+its checkpoint shard ownership and the launcher restarts from the latest
+complete checkpoint (see repro.checkpoint) on a possibly different mesh
+(elastic reshard).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable
+
+from .executor import ExecutionReport, LocalExecutor, SegmentReport
+from .job import Job, JobGraph
+from .registry import FunctionRegistry
+from .scheduler import ResultStore, VirtualCluster, Worker
+
+__all__ = ["FaultInjector", "Heartbeat", "ChaosLocalExecutor"]
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    worker: int
+    after_jobs: int | None = None      # kill once the worker finished N jobs
+    before_segment: int | None = None  # kill when segment K is about to start
+
+
+class FaultInjector:
+    def __init__(self):
+        self.plans: list[FaultPlan] = []
+        self.killed: list[int] = []
+
+    def kill_after_jobs(self, worker: int, n: int) -> "FaultInjector":
+        self.plans.append(FaultPlan(worker=worker, after_jobs=n))
+        return self
+
+    def kill_before_segment(self, worker: int, segment: int) -> "FaultInjector":
+        self.plans.append(FaultPlan(worker=worker, before_segment=segment))
+        return self
+
+    def maybe_kill(self, cluster: VirtualCluster, store: ResultStore, *,
+                   segment: int | None = None) -> list[str]:
+        """Apply due plans; returns names of results lost."""
+        lost: list[str] = []
+        for plan in list(self.plans):
+            if plan.worker >= len(cluster.workers):
+                continue
+            w = cluster.workers[plan.worker]
+            due = ((plan.after_jobs is not None and w.jobs_done >= plan.after_jobs)
+                   or (plan.before_segment is not None and segment is not None
+                       and segment >= plan.before_segment))
+            if due and w.alive:
+                w.fail()
+                self.killed.append(w.wid)
+                lost.extend(store.invalidate_worker(w.wid))
+                self.plans.remove(plan)
+        return lost
+
+
+class Heartbeat:
+    """Simulated liveness monitor: beats are reported by the executor after
+    each job; a silent worker is declared dead after ``max_missed`` rounds."""
+
+    def __init__(self, cluster: VirtualCluster, max_missed: int = 3):
+        self.cluster = cluster
+        self.max_missed = max_missed
+        self.last_beat: dict[int, int] = {}
+        self.round = 0
+
+    def beat(self, wid: int) -> None:
+        self.last_beat[wid] = self.round
+
+    def tick(self, store: ResultStore) -> list[str]:
+        """Advance one monitoring round; kill silent workers, return lost results."""
+        self.round += 1
+        lost: list[str] = []
+        for w in self.cluster.alive_workers():
+            if self.round - self.last_beat.get(w.wid, 0) > self.max_missed:
+                w.fail()
+                lost.extend(store.invalidate_worker(w.wid))
+        return lost
+
+
+class ChaosLocalExecutor(LocalExecutor):
+    """LocalExecutor wired to a FaultInjector — used by tests/benchmarks to
+    prove the recovery path (re-execution from the job graph) works."""
+
+    def __init__(self, cluster: VirtualCluster, registry: FunctionRegistry,
+                 injector: FaultInjector, **kw):
+        super().__init__(cluster, registry, **kw)
+        self.injector = injector
+
+    def run(self, graph: JobGraph, **kw):
+        # hook segment boundaries: apply segment-triggered kills by wrapping
+        # the placement loop via the parent implementation (we intercept by
+        # overriding _execute_on and checking before each job)
+        self._graph_ref = graph
+        return super().run(graph, **kw)
+
+    def _execute_on(self, job, worker, graph, report, ctx=None):
+        self.injector.maybe_kill(self.cluster, self.store, segment=job.segment)
+        if not worker.alive:
+            # the scheduler would notice the dead worker and re-place
+            alive = self.cluster.alive_workers()
+            worker = (min(alive, key=lambda w: w.jobs_done) if alive
+                      else self.cluster.spawn_worker())
+        out = super()._execute_on(job, worker, graph, report, ctx)
+        self.injector.maybe_kill(self.cluster, self.store, segment=job.segment)
+        return out

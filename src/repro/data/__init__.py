@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticLMStream, make_batch_specs, Prefetcher

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+platform-dispatching wrapper), ref.py (pure-jnp oracle used for allclose
+validation and as the CPU fallback path).
+"""

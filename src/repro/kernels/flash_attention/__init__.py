@@ -1,0 +1,3 @@
+from . import ops, ref
+from .kernel import flash_attention_kernel
+from .ops import flash_attention

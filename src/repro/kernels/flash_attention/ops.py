@@ -1,0 +1,33 @@
+"""jit'd public wrapper: platform dispatch (TPU kernel / interpret / oracle)."""
+import functools
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+from .ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl",
+                                             "q_block", "kv_block"))
+def flash_attention(q, k, v, *, causal=True, window=None, impl="auto",
+                    q_block=512, kv_block=512):
+    """q: (B, S, H, D); k/v: (B, T, KV, D) — model layout; returns same.
+
+    impl: auto (kernel on TPU, oracle elsewhere) | kernel | interpret | ref
+    """
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if impl == "auto":
+        impl = "kernel" if _on_tpu() else "ref"
+    if impl == "ref":
+        out = attention_ref(qt, kt, vt, causal=causal, window=window)
+    else:
+        out = flash_attention_kernel(
+            qt, kt, vt, causal=causal, window=window, q_block=q_block,
+            kv_block=kv_block, interpret=(impl == "interpret"))
+    return out.transpose(0, 2, 1, 3)

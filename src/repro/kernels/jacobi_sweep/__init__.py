@@ -1,0 +1,3 @@
+from . import ops, ref
+from .kernel import jacobi_sweep_kernel
+from .ops import jacobi_sweep

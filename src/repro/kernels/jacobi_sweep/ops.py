@@ -1,0 +1,17 @@
+"""jit'd wrapper for the Jacobi sweep."""
+import functools
+import jax
+
+from .kernel import jacobi_sweep_kernel
+from .ref import jacobi_sweep_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "row_block", "col_block"))
+def jacobi_sweep(A, x, b, diag, *, impl="auto", row_block=256, col_block=256):
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref" or A.shape[0] % min(row_block, A.shape[0]):
+        return jacobi_sweep_ref(A, x, b, diag)
+    return jacobi_sweep_kernel(A, x, b, diag, row_block=row_block,
+                               col_block=col_block,
+                               interpret=(impl == "interpret"))

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the Jacobi sweep kernel."""
+import jax.numpy as jnp
+
+
+def jacobi_sweep_ref(A, x, b, diag):
+    Af = A.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    t = Af @ xf
+    return ((b.astype(jnp.float32) - t + diag.astype(jnp.float32) * xf)
+            / diag.astype(jnp.float32)).astype(x.dtype)

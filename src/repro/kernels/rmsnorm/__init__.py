@@ -1,0 +1,3 @@
+from . import ops, ref
+from .kernel import rmsnorm_kernel
+from .ops import rmsnorm

@@ -1,0 +1,40 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+One pass over a (rows × d) tile resident in VMEM: mean-of-squares reduction
+and the scale multiply fused, fp32 accumulation, output in input dtype.
+Grid over row blocks; d stays whole (d ≤ 16384 ⇒ ≤ 64 KB/row fp32, tile
+rows chosen so the tile fits VMEM comfortably).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)            # (rb, d)
+    g = g_ref[...].astype(jnp.float32)            # (1, d)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * g).astype(o_ref.dtype)
+
+
+def rmsnorm_kernel(x2d, gain, *, eps: float = 1e-6, row_block: int = 256,
+                   interpret: bool = False):
+    """x2d: (R, d); gain: (d,) -> (R, d)."""
+    R, d = x2d.shape
+    rb = min(row_block, R)
+    assert R % rb == 0, (R, rb)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(R // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, d), lambda r: (r, 0)),
+            pl.BlockSpec((1, d), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, d), x2d.dtype),
+        interpret=interpret,
+    )(x2d, gain.reshape(1, d))

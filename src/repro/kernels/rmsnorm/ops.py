@@ -1,0 +1,24 @@
+"""jit'd wrapper: fused RMSNorm on arbitrary-rank inputs."""
+import functools
+import jax
+import jax.numpy as jnp
+
+from .kernel import rmsnorm_kernel
+from .ref import rmsnorm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "impl"))
+def rmsnorm(x, gain, *, eps=1e-6, impl="auto"):
+    shape = x.shape
+    x2d = x.reshape(-1, shape[-1])
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref" or x2d.shape[0] % 8:
+        out = rmsnorm_ref(x2d, gain, eps=eps)
+    else:
+        rb = 256
+        while x2d.shape[0] % rb:
+            rb //= 2
+        out = rmsnorm_kernel(x2d, gain, eps=eps, row_block=rb,
+                             interpret=(impl == "interpret"))
+    return out.reshape(shape)

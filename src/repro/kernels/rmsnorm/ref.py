@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x2d, gain, *, eps=1e-6):
+    xf = x2d.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * gain.astype(jnp.float32)).astype(x2d.dtype)

@@ -1,0 +1,3 @@
+from . import ops, ref
+from .kernel import ssd_intra_chunk_kernel
+from .ops import ssd_intra_chunk

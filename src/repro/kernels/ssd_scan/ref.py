@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_intra_chunk_ref(xh, dt, a, Bm, Cm):
+    """Same contract as the kernel: xh (BC,H,Q,P), dt/a (BC,H,Q,1),
+    Bm/Cm (BC,Q,N) -> (y (BC,H,Q,P), S (BC,H,N,P))."""
+    x = xh.astype(jnp.float32)
+    dtf = dt[..., 0].astype(jnp.float32)          # (BC,H,Q)
+    af = a[..., 0].astype(jnp.float32)
+    B = Bm.astype(jnp.float32)
+    C = Cm.astype(jnp.float32)
+    Q = x.shape[2]
+    cum = jnp.cumsum(af, axis=-1)                 # (BC,H,Q)
+    seg = cum[..., :, None] - cum[..., None, :]   # (BC,H,Q,Q)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bqn,bsn->bqs", C, B)         # (BC,Q,Q)
+    M = CB[:, None] * L                           # (BC,H,Q,Q)
+    y = jnp.einsum("bhqs,bhs,bhsp->bhqp", M, dtf, x)
+    decay_end = jnp.exp(cum[..., -1:] - cum)      # (BC,H,Q)
+    S = jnp.einsum("bhq,bqn,bhqp->bhnp", decay_end * dtf, B, x)
+    return y, S

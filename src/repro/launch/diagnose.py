@@ -1,0 +1,99 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Perf diagnosis for one (arch × cell × mesh): where do the FLOPs,
+HBM traffic and collective bytes actually come from?
+
+Prints the top-N collective ops (kind, per-call bytes, trip multiplier,
+defining computation) and the top computations by flops/traffic — the
+profile the §Perf hillclimb iterates on (no real-TPU timings exist here;
+the lowered IR is the profile, per the assignment).
+
+Usage::
+
+    python -m repro.launch.diagnose --arch qwen2-1.5b --cell train_4k [--multi-pod]
+"""
+import argparse
+import re
+
+import jax
+
+from repro.analysis.hlo import COLLECTIVES, _parse_computations, _finalize_ops, analyze_hlo
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell, rules_for_cell
+from repro.models.config import SHAPE_CELLS
+from repro.parallel.sharding import use_rules
+
+
+def compile_cell(arch, cell_name, multi_pod=False):
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = SHAPE_CELLS[cell_name]
+    rules = rules_for_cell(mesh, cell, cfg)
+    with use_rules(mesh, rules.rules):
+        spec = build_cell(arch, cfg, cell_name, rules)
+        jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings,
+                         out_shardings=spec.out_shardings,
+                         donate_argnums=spec.donate_argnums)
+        compiled = jitted.lower(*spec.args).compile()
+    return compiled, spec, mesh
+
+
+def diagnose(text: str, top: int = 20):
+    comps, entry = _parse_computations(text)
+    for c in comps.values():
+        _finalize_ops(c)
+    an = analyze_hlo(text)
+    mult = {name: d["mult"] for name, d in an.by_computation.items()}
+
+    rows = []
+    for name, comp in comps.items():
+        m = mult.get(name, 0)
+        if not m:
+            continue
+        for op in comp.ops:
+            if op.opcode in COLLECTIVES:
+                # recover a source hint from metadata
+                hint = ""
+                mm = re.search(r'op_name="([^"]+)"', op.attrs)
+                if mm:
+                    hint = mm.group(1)[-90:]
+                rows.append((op.in_bytes * m, op.opcode, op.in_bytes, int(m),
+                             name[:28], hint))
+    rows.sort(reverse=True)
+    print(f"top {top} collective sites (total-bytes-weighted):")
+    for tot, kind, b, m, comp, hint in rows[:top]:
+        print(f"  {kind:19s} {b/2**20:9.2f}MiB x{m:5d} = {tot/2**30:8.2f}GiB "
+              f"[{comp}] {hint}")
+
+    print("\ntop computations by flops:")
+    by_flops = sorted(an.by_computation.items(),
+                      key=lambda kv: -kv[1]["flops"] * kv[1]["mult"])
+    for name, d in by_flops[:10]:
+        print(f"  {name[:40]:42s} mult={d['mult']:7.0f} "
+              f"flops={d['flops']*d['mult']:.3e} traffic={d['traffic']*d.get('hbm_mult',0):.3e}")
+    print("\nsummary:", an.summary())
+    return an
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS), required=True)
+    ap.add_argument("--cell", choices=list(SHAPE_CELLS), required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--dump-hlo", default="")
+    args = ap.parse_args(argv)
+    compiled, spec, mesh = compile_cell(args.arch, args.cell, args.multi_pod)
+    text = compiled.as_text()
+    if args.dump_hlo:
+        with open(args.dump_hlo, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)/1e6:.1f}MB HLO to {args.dump_hlo}")
+    diagnose(text, top=args.top)
+
+
+if __name__ == "__main__":
+    main()

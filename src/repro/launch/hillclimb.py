@@ -1,0 +1,76 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""§Perf hillclimb runner: re-lower a cell after a code/config change and
+diff its roofline terms against the recorded baseline.
+
+Usage::
+
+    python -m repro.launch.hillclimb --arch llama3-405b --cell train_4k \
+        --baseline benchmarks/results/dryrun.jsonl \
+        --log benchmarks/results/perf_iterations.jsonl \
+        --note "H1: ZeRO-1 weight replication"
+"""
+import argparse
+import json
+import time
+
+from repro.launch.dryrun import run_cell
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--baseline", default="benchmarks/results/dryrun.jsonl")
+    ap.add_argument("--log", default="benchmarks/results/perf_iterations.jsonl")
+    ap.add_argument("--note", default="")
+    args = ap.parse_args(argv)
+
+    mesh = "2x16x16" if args.multi_pod else "16x16"
+    base = None
+    try:
+        with open(args.baseline) as f:
+            for line in f:
+                r = json.loads(line)
+                if (r["arch"], r["cell"], r["mesh"]) == (args.arch, args.cell, mesh):
+                    base = r
+    except FileNotFoundError:
+        pass
+    # later iterations logged for the same cell become the new comparison point
+    try:
+        with open(args.log) as f:
+            for line in f:
+                r = json.loads(line)
+                if (r["arch"], r["cell"], r["mesh"]) == (args.arch, args.cell, mesh):
+                    base = r
+    except FileNotFoundError:
+        pass
+
+    rec = run_cell(args.arch, args.cell, multi_pod=args.multi_pod)
+    rec["note"] = args.note
+    rec["ts"] = time.strftime("%Y-%m-%d %H:%M:%S")
+
+    if base is not None:
+        print("\n=== delta vs previous ===")
+        for k in ("compute_s", "memory_s", "collective_s", "bytes_per_device",
+                  "roofline_fraction"):
+            b, n = base[k], rec[k]
+            d = (n / b - 1) * 100 if b else float("inf")
+            unit = "GiB" if k == "bytes_per_device" else ""
+            bb = b / 2**30 if unit else b
+            nn = n / 2**30 if unit else n
+            print(f"  {k:20s} {bb:12.4f} -> {nn:12.4f} {unit:4s} ({d:+.1f}%)")
+        rec["baseline_dominant"] = base["dominant"]
+        for k in ("compute_s", "memory_s", "collective_s"):
+            rec[f"delta_{k}_pct"] = (rec[k] / base[k] - 1) * 100 if base[k] else None
+
+    with open(args.log, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(f"\nlogged to {args.log}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Serving driver: batched requests against a (reduced) model.
+
+Demonstrates the full serving path — batched prefill, token-by-token
+decode with KV/SSM caches, greedy & temperature sampling, and slot-based
+continuous batching (a finished request's slot is re-prefilled without
+disturbing the rest of the batch).
+
+Example::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --batch 4 --prompt-len 32 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.serve import Engine, SamplingParams
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS), default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=2,
+                    help="waves of requests (continuous batching demo)")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    rng = np.random.default_rng(args.seed)
+    key = jax.random.PRNGKey(args.seed)
+
+    from repro.models.transformer import init_params
+    params = init_params(cfg, key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    max_len = args.prompt_len + args.max_new + 8
+    eng = Engine(cfg, params, batch=args.batch, max_len=max_len)
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M batch={args.batch} "
+          f"max_len={max_len}")
+
+    sp = SamplingParams(temperature=args.temperature)
+    total_tokens = 0
+    t0 = time.time()
+    for wave in range(args.requests):
+        prompts = rng.integers(
+            0, cfg.vocab_size - 1, (args.batch, args.prompt_len)).astype(np.int32)
+        enc = None
+        if cfg.family == "encdec":
+            enc = jnp.asarray(rng.standard_normal(
+                (args.batch, 64, cfg.d_model), dtype=np.float32))
+        out = eng.generate(jnp.asarray(prompts), max_new=args.max_new, sp=sp,
+                           key=jax.random.fold_in(key, wave), enc_embeds=enc)
+        total_tokens += out.size
+        print(f"wave {wave}: generated {out.shape} tokens; "
+              f"sample row: {out[0, :10].tolist()}")
+    dt = time.time() - t0
+    print(f"throughput: {total_tokens / dt:.1f} tok/s "
+          f"({total_tokens} tokens in {dt:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

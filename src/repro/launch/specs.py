@@ -1,0 +1,194 @@
+"""ShapeDtypeStruct stand-ins + sharding trees for every (arch × cell).
+
+``input_specs`` follows the shannon/kernels pattern: weak-type-correct,
+shardable, zero allocation — everything the dry-run needs to lower and
+compile the production step functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import make_batch_specs
+from repro.models.config import SHAPE_CELLS, ModelConfig, ShapeCell
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_params, layer_plan, loss_fn)
+from repro.optim import OptimizerSpec
+from repro.parallel.partition import batch_logical_axes, tree_shardings
+from repro.parallel.sharding import ShardingRules, DEFAULT_RULES, use_rules
+from repro.train.step import TrainState, make_train_step
+
+__all__ = ["CellSpec", "build_cell", "choose_grad_accum", "model_flops_for",
+           "rules_for_cell"]
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything needed to lower one (arch × shape × mesh) cell."""
+
+    arch: str
+    cell: ShapeCell
+    fn: Callable                      # jit-able step function
+    args: tuple                       # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    model_flops: float
+    scan_trips: int
+    grad_accum: int = 1
+
+
+def rules_for_cell(mesh, cell: ShapeCell,
+                   cfg: ModelConfig | None = None) -> ShardingRules:
+    rules = dict(DEFAULT_RULES)
+    if cell.kind == "decode" and cell.global_batch == 1:
+        # long-context decode, batch 1: shard the KV sequence over everything
+        rules["kv_seq"] = ("data", "model")
+    if cfg is not None and not cfg.activation_seq_shard:
+        rules["seq"] = None          # H2: Megatron-style replicated residual
+    return ShardingRules(mesh=mesh, rules=rules)
+
+
+def choose_grad_accum(cfg: ModelConfig, cell: ShapeCell, n_data_shards: int,
+                      *, tokens_per_device_micro: int = 8_192) -> int:
+    """Pick microbatching so live activations fit HBM: target ≤ ~8k tokens
+    per device per microbatch, scaled down for very wide models (fp32
+    logits and saved layer boundaries are the live-set drivers)."""
+    per_dev = cell.tokens // max(n_data_shards, 1)
+    target = tokens_per_device_micro
+    if cfg.d_model >= 8192:
+        target //= 8
+    elif cfg.d_model >= 4096:
+        target //= 2
+    if cfg.padded_vocab >= 150_000:
+        target = min(target, 4_096)      # fp32 logits dominate
+    accum = max(1, per_dev // target)
+    # accum must divide the per-shard batch
+    b = cell.global_batch
+    while b % accum and accum > 1:
+        accum -= 1
+    return accum
+
+
+def model_flops_for(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """6·N·D (train) / 2·N·D (inference), N = active params."""
+    n = cfg.active_params()
+    if cell.kind == "train":
+        return 6.0 * n * cell.tokens
+    if cell.kind == "prefill":
+        return 2.0 * n * cell.tokens
+    return 2.0 * n * cell.global_batch          # decode: one token per slot
+
+
+def _data_shards(rules: ShardingRules) -> int:
+    return rules.axis_size(rules.rules.get("batch"))
+
+
+def _serving_params_struct(cfg: ModelConfig):
+    """Inference serves in compute dtype (bf16) — fp32 serving weights waste
+    HBM and double the per-layer gather bytes (§Perf iteration 0)."""
+    ps = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    cd = jnp.dtype(cfg.compute_dtype)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, cd)
+        if jnp.issubdtype(s.dtype, jnp.floating) else s, ps)
+
+
+def build_cell(arch: str, cfg: ModelConfig, cell_name: str,
+               rules: ShardingRules) -> CellSpec:
+    cell = SHAPE_CELLS[cell_name]
+    plan = layer_plan(cfg)
+    mesh = rules.mesh
+
+    if cell.kind == "train":
+        spec = OptimizerSpec(kind=cfg.optimizer)
+        accum = choose_grad_accum(cfg, cell, _data_shards(rules))
+        step = make_train_step(cfg, spec, grad_accum=accum)
+        state_struct = jax.eval_shape(
+            lambda k: TrainState.create(cfg, spec, k), jax.random.PRNGKey(0))
+        batch_struct = make_batch_specs(cfg, cell.global_batch, cell.seq_len,
+                                        kind="train")
+        state_sh = tree_shardings(state_struct, rules, kind="state")
+        batch_sh = jax.tree.map(
+            lambda leaf: jax.sharding.NamedSharding(
+                mesh, rules.spec_for(("batch",) + (None,) * (len(leaf.shape) - 1),
+                                     dims=leaf.shape)),
+            batch_struct)
+        return CellSpec(
+            arch=arch, cell=cell, fn=step,
+            args=(state_struct, batch_struct),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+            model_flops=model_flops_for(cfg, cell),
+            scan_trips=plan.scan_trips, grad_accum=accum)
+
+    if cell.kind == "prefill":
+        def prefill_fn(params, batch):
+            logits, _ = forward(cfg, params,
+                                tokens=batch.get("tokens"),
+                                enc_embeds=batch.get("enc_embeds"))
+            # serving returns only the last position (next-token)
+            return logits[:, -1, :]
+
+        params_struct = _serving_params_struct(cfg)
+        batch_struct = make_batch_specs(cfg, cell.global_batch, cell.seq_len,
+                                        kind="prefill")
+        params_sh = tree_shardings(params_struct, rules, kind="params")
+        batch_sh = jax.tree.map(
+            lambda leaf: jax.sharding.NamedSharding(
+                mesh, rules.spec_for(("batch",) + (None,) * (len(leaf.shape) - 1),
+                                     dims=leaf.shape)),
+            batch_struct)
+        return CellSpec(
+            arch=arch, cell=cell, fn=prefill_fn,
+            args=(params_struct, batch_struct),
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=None, donate_argnums=(),
+            model_flops=model_flops_for(cfg, cell),
+            scan_trips=plan.scan_trips)
+
+    # ---- decode -----------------------------------------------------------
+    # (unrolled decode graphs were tried and REFUTED for stacked caches:
+    # 126 live buffer versions, 1.9 TiB/dev — EXPERIMENTS.md §Perf iter 6)
+    B, S = cell.global_batch, cell.seq_len
+
+    if cfg.family == "encdec":
+        enc_struct = jax.ShapeDtypeStruct((B, 1500, cfg.d_model),
+                                          jnp.dtype(cfg.compute_dtype))
+
+        def serve_step(params, cache, tokens, enc_out):
+            return decode_step(cfg, params, cache, tokens, enc_out=enc_out)
+    else:
+        enc_struct = None
+
+        def serve_step(params, cache, tokens):
+            return decode_step(cfg, params, cache, tokens)
+
+    params_struct = _serving_params_struct(cfg)
+    cache_struct = jax.eval_shape(
+        functools.partial(init_cache, cfg, B, S, enc_len=0))
+    tokens_struct = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+
+    params_sh = tree_shardings(params_struct, rules, kind="params")
+    cache_sh = tree_shardings(cache_struct, rules, kind="cache")
+    tok_sh = jax.sharding.NamedSharding(
+        mesh, rules.spec_for(("batch", None), dims=(B, 1)))
+
+    args = (params_struct, cache_struct, tokens_struct)
+    in_sh = (params_sh, cache_sh, tok_sh)
+    if enc_struct is not None:
+        args = args + (enc_struct,)
+        enc_sh = jax.sharding.NamedSharding(
+            mesh, rules.spec_for(("batch", None, None), dims=enc_struct.shape))
+        in_sh = in_sh + (enc_sh,)
+    return CellSpec(
+        arch=arch, cell=cell, fn=serve_step, args=args,
+        in_shardings=in_sh,
+        out_shardings=(None, cache_sh), donate_argnums=(1,),
+        model_flops=model_flops_for(cfg, cell),
+        scan_trips=plan.scan_trips)

@@ -1,0 +1,3 @@
+from .config import ModelConfig, ShapeCell, SHAPE_CELLS
+from .transformer import (layer_plan, init_params, forward, loss_fn,
+                          init_cache, decode_step, prefill, param_count)

@@ -1,0 +1,252 @@
+"""Mamba-2 (SSD — state-space duality) blocks.
+
+Chunked SSD algorithm (Dao & Gu 2024, §6): the sequence is split into chunks
+of length Q; within a chunk the dual quadratic (attention-like) form is
+used, states are carried across chunks by a sequential scan.  This is the
+exact structure the paper's job model expresses naturally: chunks = jobs
+with a carried dependency (DESIGN.md §4).
+
+The intra-chunk quadratic form is the compute hot-spot; a Pallas kernel
+(``repro.kernels.ssd_scan``) implements it with VMEM tiling on TPU; this
+module is the pure-jnp path (and the kernel's oracle).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import init_dense, init_norm, apply_norm, dense, truncated_normal
+
+__all__ = ["init_mamba2", "apply_mamba2", "mamba2_decode_step", "SSMCache", "ssd_chunked"]
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    N, H = cfg.ssm_state, cfg.ssm_n_heads
+    conv_dim = di + 2 * N               # x + B + C go through the causal conv
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj: d -> [z, xBC, dt]
+        "in_proj": init_dense(ks[0], d, 2 * di + 2 * N + H, cfg),
+        "conv_w": truncated_normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                   1.0 / math.sqrt(cfg.ssm_conv), pdt),
+        "conv_b": jnp.zeros((conv_dim,), pdt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)).astype(pdt),
+        "D": jnp.ones((H,), pdt),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))).astype(pdt),
+        "norm": init_norm(cfg, di),
+        "out_proj": init_dense(ks[3], di, d, cfg, scale=1.0 / math.sqrt(di)),
+    }
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, *, chunk: int, initial_state=None,
+                return_final_state: bool = False, impl: str = "jnp"):
+    """Chunked SSD core.
+
+    xh: (B, S, H, P)   per-head inputs
+    dt: (B, S, H)      softplus'd step sizes
+    A:  (H,)           negative decay rates
+    Bm: (B, S, N)      input projections (single group, shared over heads)
+    Cm: (B, S, N)      output projections
+    Returns y: (B, S, H, P) [, final_state (B, H, P, N)].
+    """
+    B_, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        # pad to a chunk multiple with dt=0 steps (decay=1, zero input:
+        # the recurrent state passes through padding unchanged)
+        pad = Q - S % Q
+        y = ssd_chunked(
+            jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+            A,
+            jnp.pad(Bm, ((0, 0), (0, pad), (0, 0))),
+            jnp.pad(Cm, ((0, 0), (0, pad), (0, 0))),
+            chunk=Q, initial_state=initial_state,
+            return_final_state=return_final_state, impl=impl)
+        if return_final_state:
+            return y[0][:, :S], y[1]
+        return y[:, :S]
+    nc = S // Q
+
+    from repro.parallel.sharding import logical
+
+    xf = xh.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    # per-step log decay  a[t] = A * dt[t]  (negative)
+    a = dtf * A[None, None, :]                                 # (B,S,H)
+    # SSD head parallelism: the (B,nc,Q,Q,H) intra-chunk decay tensors are
+    # the dominant live set of the XLA path — shard their H axis (TP);
+    # heads never cross in SSD, so no collectives are introduced (§Perf)
+    xc = logical(xf.reshape(B_, nc, Q, H, P),
+                 "batch", None, None, "ssm_heads", None)
+    dtc = logical(dtf.reshape(B_, nc, Q, H),
+                  "batch", None, None, "ssm_heads")
+    ac = logical(a.reshape(B_, nc, Q, H),
+                 "batch", None, None, "ssm_heads")
+    Bc = Bf.reshape(B_, nc, Q, N)
+    Cc = Cf.reshape(B_, nc, Q, N)
+
+    cum = jnp.cumsum(ac, axis=2)                               # (B,nc,Q,H)
+    if impl in ("kernel", "interpret"):
+        # Pallas path: (B·nc, H, Q, P) layout, kernel computes y_intra + states
+        from repro.kernels.ssd_scan.ops import ssd_intra_chunk
+        xk = xc.reshape(B_ * nc, Q, H, P).transpose(0, 2, 1, 3)
+        dtk = dtc.reshape(B_ * nc, Q, H).transpose(0, 2, 1)[..., None]
+        ak = ac.reshape(B_ * nc, Q, H).transpose(0, 2, 1)[..., None]
+        Bk = Bc.reshape(B_ * nc, Q, N)
+        Ck = Cc.reshape(B_ * nc, Q, N)
+        yk, Sk = ssd_intra_chunk(xk, dtk, ak, Bk, Ck, impl=impl)
+        y_intra = yk.transpose(0, 2, 1, 3).reshape(B_, nc, Q, H, P)
+        S_chunk = Sk.transpose(0, 1, 3, 2).reshape(B_, nc, H, P, N)
+    else:
+        # ---- intra-chunk (dual quadratic form) ----------------------------
+        # L[t,s] = exp(cum[t] - cum[s]) for s<=t else 0
+        seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,Q,Q,H)
+        tri = jnp.tril(jnp.ones((Q, Q), jnp.bool_))
+        L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+        CB = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)             # (B,nc,Q,Q)
+        M = CB[..., None] * L                                  # (B,nc,Q,Q,H)
+        y_intra = jnp.einsum("bcqsh,bcsh,bcshp->bcqhp", M, dtc, xc)
+
+        # state contribution of chunk c:
+        #   sum_s exp(cum_end - cum[s]) dt[s] B[s] x[s]
+        decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,nc,Q,H)
+        S_chunk = jnp.einsum("bcsh,bcsh,bcsn,bcshp->bchpn",
+                             decay_to_end, dtc, Bc, xc)        # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # (B,nc,H)
+
+    # ---- inter-chunk sequential scan over nc chunks -------------------------
+    if initial_state is None:
+        s0 = jnp.zeros((B_, H, P, N), jnp.float32)
+    else:
+        s0 = initial_state.astype(jnp.float32)
+
+    def step(s_prev, xs):
+        s_c, dec = xs                                          # (B,H,P,N), (B,H)
+        s_new = s_prev * dec[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    final_state, s_before = jax.lax.scan(
+        step, s0, (S_chunk.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    s_before = s_before.swapaxes(0, 1)                         # (B,nc,H,P,N)
+
+    # inter contribution: y[t] += exp(cum[t]) * C[t] · s_before
+    y_inter = jnp.einsum("bcqh,bcqn,bchpn->bcqhp",
+                         jnp.exp(cum), Cc, s_before)
+    y = (y_intra + y_inter).reshape(B_, S, H, P).astype(xh.dtype)
+    if return_final_state:
+        return y, final_state
+    return y
+
+
+def _causal_conv(x, w, b):
+    """x: (B, S, C); w: (W, C); causal depthwise conv."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    return out + b[None, None, :]
+
+
+def apply_mamba2(cfg: ModelConfig, p: dict, x: jax.Array, *,
+                 initial_state=None, return_state: bool = False,
+                 return_cache: bool = False, impl: str = "auto"):
+    """Full Mamba-2 mixer. x: (B,S,d) -> (B,S,d).
+
+    ``return_cache``: also return a decode cache (conv tail + final SSD
+    state) so a serving engine can continue token-by-token (prefill)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    di, N, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    P = cfg.ssm_head_dim
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "jnp"
+
+    proj = dense(p["in_proj"], x, cd)
+    z, xBC_raw, dt = jnp.split(proj, [di, 2 * di + 2 * N], axis=-1)
+    xBC = _causal_conv(xBC_raw.astype(jnp.float32), p["conv_w"].astype(jnp.float32),
+                       p["conv_b"].astype(jnp.float32))
+    xBC = jax.nn.silu(xBC).astype(cd)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(B, S, H, P)
+    y, fstate = ssd_chunked(xh, dtf, A, Bm, Cm, chunk=cfg.ssm_chunk,
+                            initial_state=initial_state,
+                            return_final_state=True, impl=impl)
+    y = y + xh.astype(jnp.float32).astype(cd) * p["D"].astype(cd)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = apply_norm(cfg, p["norm"], y * jax.nn.silu(z))
+    out = dense(p["out_proj"], y, cd)
+    if return_cache:
+        W = cfg.ssm_conv
+        assert S >= W - 1, f"prefill length {S} < conv window {W - 1}"
+        tail = xBC_raw.astype(jnp.float32)[:, S - (W - 1):S, :]
+        return out, {"conv": tail, "state": fstate}
+    if return_state:
+        return out, fstate
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token recurrence)
+# ---------------------------------------------------------------------------
+
+
+class SSMCache:
+    @staticmethod
+    def init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+        di, N, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads
+        P = cfg.ssm_head_dim
+        return {
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), jnp.float32),
+            "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        }
+
+
+def mamba2_decode_step(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict):
+    """x: (B, 1, d); returns (out (B,1,d), new_cache)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, _, d = x.shape
+    di, N, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    P = cfg.ssm_head_dim
+
+    proj = dense(p["in_proj"], x, cd)[:, 0]                     # (B, ...)
+    z, xBC, dt = jnp.split(proj, [di, 2 * di + 2 * N], axis=-1)
+
+    # conv ring buffer: history (B, W-1, C) + current
+    hist = cache["conv"]
+    full = jnp.concatenate([hist, xBC.astype(jnp.float32)[:, None, :]], axis=1)
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = jnp.einsum("bwc,wc->bc", full, w) + p["conv_b"].astype(jnp.float32)
+    xBC_t = jax.nn.silu(conv_out)
+    new_conv = full[:, 1:]
+
+    xs, Bm, Cm = jnp.split(xBC_t, [di, di + N], axis=-1)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(B, H, P)
+    decay = jnp.exp(dtf * A[None, :])                            # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dtf, Bm, xh)
+    state = cache["state"] * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm, state)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+
+    y = y.reshape(B, 1, di).astype(cd)
+    y = apply_norm(cfg, p["norm"], y * jax.nn.silu(z[:, None, :]))
+    out = dense(p["out_proj"], y, cd)
+    return out, {"conv": new_conv, "state": state}

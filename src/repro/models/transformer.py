@@ -1,0 +1,526 @@
+"""Model composition: every assigned architecture as a pattern-scanned stack.
+
+A model is ``(pattern, n_groups, tail)``: the *pattern* is a short list of
+block kinds (e.g. gemma3's ``5×local + 1×global``), scanned ``n_groups``
+times with stacked parameters, plus an unscanned *tail* (remainder layers).
+This keeps the compiled HLO small (one pattern body) while allowing
+heterogeneous stacks — and gives the HLO analyzer a single while-loop whose
+trip count is ``n_groups`` (DESIGN.md §5).
+
+Block kinds:
+  dense   — attention + gated MLP            (qwen2, deepseek, llama3, chameleon)
+  local   — sliding-window attention + MLP   (gemma3 local layers)
+  global  — full attention + MLP             (gemma3 global layers)
+  moe     — attention + mixture-of-experts   (mixtral [SWA], qwen2-moe)
+  ssm     — Mamba-2 mixer                    (mamba2, zamba2 backbone)
+  shared  — zamba2's *shared* attention+MLP block (one parameter set,
+            invoked at every occurrence)
+  enc/dec — whisper encoder / decoder (cross-attention) blocks
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import current_rules, logical
+from .attention import KVCache, attention, init_attention
+from .config import ModelConfig
+from .layers import (apply_mlp, apply_norm, embed, init_embedding, init_mlp,
+                     init_norm, truncated_normal, unembed)
+from .moe import apply_moe, init_moe
+from .ssm import SSMCache, apply_mamba2, init_mamba2, mamba2_decode_step
+
+__all__ = [
+    "layer_plan", "init_params", "forward", "loss_fn", "init_cache",
+    "prefill", "decode_step", "param_count",
+]
+
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    pattern: tuple[str, ...]
+    n_groups: int
+    tail: tuple[str, ...]
+    enc_pattern: tuple[str, ...] = ()
+    enc_groups: int = 0
+
+    @property
+    def scan_trips(self) -> int:
+        return self.n_groups
+
+
+def layer_plan(cfg: ModelConfig) -> LayerPlan:
+    L = cfg.n_layers
+    if cfg.family == "encdec":
+        return LayerPlan(pattern=("dec",), n_groups=L, tail=(),
+                         enc_pattern=("enc",), enc_groups=cfg.n_encoder_layers)
+    if cfg.family == "ssm":
+        return LayerPlan(pattern=("ssm",), n_groups=L, tail=())
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        g, r = divmod(L, k)
+        return LayerPlan(pattern=("ssm",) * k + ("shared",), n_groups=g,
+                         tail=("ssm",) * r)
+    if cfg.local_global_ratio:
+        k = cfg.local_global_ratio + 1
+        g, r = divmod(L, k)
+        return LayerPlan(pattern=("local",) * cfg.local_global_ratio + ("global",),
+                         n_groups=g, tail=("local",) * r)
+    if cfg.is_moe:
+        return LayerPlan(pattern=("moe",), n_groups=L, tail=())
+    return LayerPlan(pattern=("dense",), n_groups=L, tail=())
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _has_attn(kind: str) -> bool:
+    return kind in ("dense", "local", "global", "moe", "shared", "enc", "dec")
+
+
+def init_block(key, cfg: ModelConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 6)
+    if kind == "ssm":
+        return {"ln1": init_norm(cfg), "mixer": init_mamba2(ks[0], cfg)}
+    p = {"ln1": init_norm(cfg), "attn": init_attention(ks[0], cfg),
+         "ln2": init_norm(cfg)}
+    if kind == "moe":
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    if kind == "dec":
+        p["ln_cross"] = init_norm(cfg)
+        p["cross"] = init_attention(ks[2], cfg, cross=True)
+    return p
+
+
+def _window_for(cfg: ModelConfig, kind: str) -> int | None:
+    if kind == "local":
+        return cfg.local_window
+    if kind in ("dense", "moe", "global", "shared"):
+        return cfg.sliding_window if kind in ("dense", "moe") else None
+    return None
+
+
+def apply_block(cfg: ModelConfig, kind: str, p: dict, x, *, positions,
+                enc_out=None, cache=None, cache_len=None,
+                impl: str = "auto"):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+
+    if kind == "ssm":
+        h = apply_norm(cfg, p["ln1"], x)
+        if cache is not None and x.shape[1] == 1:
+            out, new_cache = mamba2_decode_step(cfg, p["mixer"], h, cache)
+        elif cache is not None:
+            # batched prefill: run the chunked scan, emit a decode cache
+            out, new_cache = apply_mamba2(cfg, p["mixer"], h, return_cache=True)
+        else:
+            out = apply_mamba2(cfg, p["mixer"], h)
+        return x + out, new_cache, aux
+
+    causal = kind != "enc"
+    window = _window_for(cfg, kind)
+    h = apply_norm(cfg, p["ln1"], x)
+    sa_cache = cache.get("self") if cache is not None else None
+    out, new_sa = attention(cfg, p["attn"], h, positions=positions,
+                            causal=causal, window=window, cache=sa_cache,
+                            cache_len=cache_len, impl=impl,
+                            rope=cfg.use_rope and kind != "enc" and kind != "dec")
+    x = x + logical(out, "batch", "seq", "embed")
+
+    if kind == "dec" and enc_out is not None:
+        h = apply_norm(cfg, p["ln_cross"], x)
+        enc_len = enc_out.shape[1]
+        # cross K/V recomputed per call (cacheing them is a serving-engine
+        # optimisation; see repro/serve/engine.py)
+        out, _ = attention(cfg, p["cross"], h, kv_x=enc_out,
+                           positions=positions,
+                           kv_positions=jnp.arange(enc_len),
+                           causal=False, rope=False)
+        x = x + out
+
+    h = apply_norm(cfg, p["ln2"], x)
+    if kind == "moe":
+        out, aux = apply_moe(cfg, p["moe"], h)
+    else:
+        out = apply_mlp(cfg, p["mlp"], h)
+    x = x + logical(out, "batch", "seq", "embed")
+
+    if cache is not None and kind != "ssm":
+        # return ONLY the update (deltas) — returning the old cache slices
+        # would double-buffer them through the scan ys (§Perf)
+        new_cache = {"self": new_sa} if new_sa is not None else {}
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    plan = layer_plan(cfg)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {"embed": init_embedding(keys[0], cfg)}
+
+    def stacked(key, kind, n):
+        ks = jax.random.split(key, n)
+        return jax.vmap(lambda k: init_block(k, cfg, kind))(ks)
+
+    # scanned groups: one stacked param tree per pattern position
+    gkeys = jax.random.split(keys[1], max(len(plan.pattern), 1))
+    params["groups"] = [
+        stacked(gkeys[i], kind, plan.n_groups) if kind != "shared" else {}
+        for i, kind in enumerate(plan.pattern)
+    ]
+    if "shared" in plan.pattern:
+        params["shared"] = init_block(keys[2], cfg, "shared")
+    tkeys = jax.random.split(keys[3], max(len(plan.tail), 1))
+    params["tail"] = [init_block(tkeys[i], cfg, kind)
+                      for i, kind in enumerate(plan.tail)]
+    params["norm_f"] = init_norm(cfg)
+
+    if cfg.family == "encdec":
+        ekeys = jax.random.split(keys[4], 3)
+        params["enc_groups"] = [stacked(ekeys[0], "enc", plan.enc_groups)]
+        params["enc_norm_f"] = init_norm(cfg)
+        params["enc_pos"] = truncated_normal(
+            ekeys[1], (cfg.max_seq, cfg.d_model), 0.02,
+            jnp.dtype(cfg.param_dtype))
+        params["dec_pos"] = truncated_normal(
+            ekeys[2], (cfg.max_seq, cfg.d_model), 0.02,
+            jnp.dtype(cfg.param_dtype))
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "save_dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _constrain_block_params(p):
+    """Re-assert the (FSDP/TP) sharding of per-layer params sliced out of the
+    scan xs.  Without this GSPMD may all-gather the whole stacked weight
+    array outside the loop ("wide" while), keeping every layer's gathered
+    weights live simultaneously — §Perf iteration H7."""
+    if current_rules() is None or p is None:
+        return p
+    from repro.parallel.partition import axes_for_path
+    flat, treedef = jax.tree_util.tree_flatten_with_path(p)
+    out = []
+    for path, leaf in flat:
+        keys = tuple(str(getattr(x, "key", getattr(x, "idx", x))) for x in path)
+        axes = axes_for_path(keys, getattr(leaf, "ndim", 0))
+        out.append(logical(leaf, *axes) if hasattr(leaf, "ndim") else leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _run_stack(cfg: ModelConfig, plan_pattern, groups, tail_kinds, tail,
+               shared, x, positions, *, enc_out=None, impl="auto"):
+    """Scan the pattern over groups, then the tail. Returns (x, aux)."""
+
+    def group_body(carry, gparams):
+        h, aux = carry
+        for i, kind in enumerate(plan_pattern):
+            # (H7 constraint on sliced params is applied only on decode
+            # paths; in training it triggered GSPMD replicate-then-partition
+            # weight all-reduces — §Perf)
+            p = shared if kind == "shared" else gparams[i]
+            h, _, a = apply_block(cfg, kind, p, h, positions=positions,
+                                  enc_out=enc_out, impl=impl)
+            aux = aux + a
+        h = logical(h, "batch", "seq", "embed")
+        return (h, aux), None
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if groups and jax.tree.leaves(groups):
+        n_groups = jax.tree.leaves(groups)[0].shape[0]
+        if cfg.scan_layers and n_groups > 1:
+            body = _remat(cfg, group_body)
+            (x, aux0), _ = jax.lax.scan(body, (x, aux0), tuple(groups))
+        else:
+            for g in range(n_groups):
+                gp = jax.tree.map(lambda t: t[g], tuple(groups))
+                (x, aux0), _ = _remat(cfg, group_body)((x, aux0), gp)
+    for i, kind in enumerate(tail_kinds):
+        x, _, a = apply_block(cfg, kind, tail[i], x, positions=positions,
+                              enc_out=enc_out, impl=impl)
+        aux0 = aux0 + a
+    return x, aux0
+
+
+def forward(cfg: ModelConfig, params: dict, *, tokens=None, embeds=None,
+            positions=None, enc_embeds=None, impl: str = "auto"):
+    """Full-sequence forward (train / prefill).  Returns (logits, aux).
+
+    ``tokens``: (B, S) int32 — LM input.
+    ``embeds``: (B, S, d) — precomputed embeddings (stub modality frontend).
+    ``enc_embeds``: (B, T, d) — encoder input for encdec (whisper frames).
+    """
+    plan = layer_plan(cfg)
+    if embeds is None:
+        x = embed(cfg, params["embed"], tokens)
+    else:
+        x = embeds.astype(jnp.dtype(cfg.compute_dtype))
+    B, S = x.shape[0], x.shape[1]
+    if positions is None:
+        positions = jnp.arange(S)
+    x = logical(x, "batch", "seq", "embed")
+
+    enc_out = None
+    if cfg.family == "encdec":
+        assert enc_embeds is not None, "encdec model needs enc_embeds"
+        e = enc_embeds.astype(jnp.dtype(cfg.compute_dtype))
+        e = e + params["enc_pos"][: e.shape[1]].astype(e.dtype)[None]
+        e = logical(e, "batch", "seq", "embed")
+        e, _ = _run_stack(cfg, plan.enc_pattern, tuple(params["enc_groups"]),
+                          (), (), None, e, jnp.arange(e.shape[1]), impl=impl)
+        enc_out = apply_norm(cfg, params["enc_norm_f"], e)
+        x = x + params["dec_pos"][positions].astype(x.dtype)
+
+    x, aux = _run_stack(cfg, plan.pattern, tuple(params["groups"]),
+                        plan.tail, params["tail"], params.get("shared"),
+                        x, positions, enc_out=enc_out, impl=impl)
+    x = apply_norm(cfg, params["norm_f"], x)
+    logits = unembed(cfg, params["embed"], x)
+    logits = logical(logits, "batch", None, "vocab")
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict, *, impl="auto"):
+    """Next-token cross-entropy (+ MoE aux).  batch: tokens, labels, mask
+    (+ enc_embeds / embeds for stub-frontend families)."""
+    logits, aux = forward(cfg, params,
+                          tokens=batch.get("tokens"),
+                          embeds=batch.get("embeds"),
+                          enc_embeds=batch.get("enc_embeds"),
+                          impl=impl)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    logits = logits.astype(jnp.float32)
+    # mask out vocab padding
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad = jnp.full((cfg.padded_vocab - cfg.vocab_size,), -1e9, jnp.float32)
+        logits = logits.at[..., cfg.vocab_size:].set(pad)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + cfg.router_aux_weight * aux
+    return total, {"loss": loss, "aux": aux,
+                   "tokens": jnp.sum(mask)}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def _init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                      dtype, enc_len: int = 0):
+    if kind == "ssm":
+        return SSMCache.init(cfg, batch)
+    return {"self": KVCache.init(cfg, batch, max_len, dtype)}
+
+
+def _is_delta(upd) -> bool:
+    return isinstance(upd, dict) and "k_delta" in upd
+
+
+def _apply_cache_update(old_layer_cache, upd, pos):
+    """Apply a block's cache update to an UNSTACKED layer cache."""
+    if upd is None:
+        return old_layer_cache
+    out = {}
+    for key, val in upd.items():
+        if key == "self" and _is_delta(val):
+            idx = jnp.reshape(jnp.asarray(pos), ())
+            out["self"] = {
+                kk: jax.lax.dynamic_update_slice(
+                    old_layer_cache["self"][kk], val[f"{kk}_delta"],
+                    (0, 0, idx, 0))
+                for kk in ("k", "v")}
+        else:
+            out[key] = val
+    return out
+
+
+def _apply_stacked_updates(stacked, updates, pos):
+    """Apply scan-collected per-layer updates to a stacked cache.
+
+    KV deltas (G,B,KV,S,D) are written with ONE dynamic-update-slice at the
+    token position; SSM states come out of the scan already whole, stacked —
+    they simply replace the old buffers."""
+    if updates is None:
+        return stacked
+    new = dict(stacked)
+    for key, val in updates.items():
+        if key == "self" and _is_delta(val):
+            idx = jnp.reshape(jnp.asarray(pos), ())
+            new["self"] = {
+                kk: jax.lax.dynamic_update_slice(
+                    stacked["self"][kk],
+                    val[f"{kk}_delta"].astype(stacked["self"][kk].dtype),
+                    (0, 0, 0, idx, 0))
+                for kk in ("k", "v")}
+        else:
+            new[key] = val.astype(stacked[key].dtype)
+    return new
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, enc_len: int = 0):
+    plan = layer_plan(cfg)
+    dtype = jnp.dtype(cfg.kv_cache_dtype or cfg.compute_dtype)
+
+    def stacked_cache(kind):
+        one = lambda: _init_block_cache(cfg, kind, batch, max_len, dtype, enc_len)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (plan.n_groups,) + x.shape).copy()
+            if plan.n_groups > 1 else x[None], one())
+
+    cache = {
+        "groups": [stacked_cache(kind) for kind in plan.pattern],
+        "tail": [_init_block_cache(cfg, kind, batch, max_len, dtype, enc_len)
+                 for kind in plan.tail],
+        "len": jnp.zeros((), jnp.int32),
+    }
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens, *,
+                enc_out=None, embeds=None, impl: str = "auto"):
+    """One cache-extending step.  tokens: (B, S) int32 (or embeds (B,S,d));
+    S == 1 is decode, S > 1 is batched prefill (cache must be fresh).
+    Returns (logits (B, S, V), new_cache)."""
+    plan = layer_plan(cfg)
+    if embeds is None:
+        x = embed(cfg, params["embed"], tokens)
+    else:
+        x = embeds.astype(jnp.dtype(cfg.compute_dtype))
+    S = x.shape[1]
+    pos = cache["len"]
+    positions = pos + jnp.arange(S, dtype=jnp.int32)
+    if cfg.family == "encdec":
+        x = x + params["dec_pos"][positions][None].astype(x.dtype)
+
+    # Cache-update architecture (§Perf iterations 2-8): during one step the
+    # KV cache is READ-ONLY — the new token's contribution enters attention
+    # through a log-sum-exp self term — so the stacked caches are scanned as
+    # read-only xs (no while-carry copy hazards), per-layer updates come out
+    # as small delta ys, and ONE batched dynamic-update-slice per cache
+    # applies them afterwards into the donated input buffers.
+    def group_body(carry, xs):
+        h = carry
+        gparams, gcache = xs
+        updates = []
+        for i, kind in enumerate(plan.pattern):
+            p = (params.get("shared") if kind == "shared"
+                 else _constrain_block_params(gparams[i]))
+            h, nc, _ = apply_block(cfg, kind, p, h, positions=positions,
+                                   enc_out=enc_out, cache=gcache[i],
+                                   cache_len=pos, impl=impl)
+            updates.append(nc)
+        return h, tuple(updates)
+
+    groups = tuple(params["groups"])
+    gcaches = tuple(cache["groups"])
+    if jax.tree.leaves(groups):
+        n_groups = jax.tree.leaves(groups)[0].shape[0]
+        if cfg.scan_layers and n_groups > 1:
+            x, updates = jax.lax.scan(group_body, x, (groups, gcaches))
+        else:
+            outs = []
+            for g in range(n_groups):
+                gp = jax.tree.map(lambda t: t[g], groups)
+                gc = jax.tree.map(lambda t: t[g], gcaches)
+                x, upd = group_body(x, (gp, gc))
+                outs.append(upd)
+            updates = jax.tree.map(lambda *ts: jnp.stack(ts), *outs) \
+                if outs else None
+        new_gcaches = tuple(
+            _apply_stacked_updates(gcaches[i], updates[i], pos)
+            for i in range(len(plan.pattern)))
+    else:
+        new_gcaches = gcaches
+
+    new_tail = []
+    for i, kind in enumerate(plan.tail):
+        x, nc, _ = apply_block(cfg, kind, params["tail"][i], x,
+                               positions=positions, enc_out=enc_out,
+                               cache=cache["tail"][i], cache_len=pos, impl=impl)
+        new_tail.append(_apply_cache_update(cache["tail"][i], nc, pos))
+
+    x = apply_norm(cfg, params["norm_f"], x)
+    logits = unembed(cfg, params["embed"], x)
+    logits = logical(logits, "batch", None, "vocab")
+    new_cache = {"groups": list(new_gcaches), "tail": new_tail,
+                 "len": pos + S}
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens=None, *, embeds=None,
+            enc_embeds=None, max_len: int | None = None, impl="auto"):
+    """Run the prompt through the model, building a KV cache.
+
+    Implemented as forward + cache-write: for attention layers we recompute
+    K/V per layer into the cache.  (Serving engines use this for the prefill
+    phase; decode then extends the cache.)  Returns (cache, last_logits).
+    """
+    # Simple reference implementation: step-by-step decode over the prompt.
+    # The serving engine (repro/serve) overrides this with a batched
+    # single-pass prefill; this function is the small-scale reference.
+    B, S = (tokens.shape if tokens is not None else embeds.shape[:2])
+    max_len = max_len or (S + 64)
+    enc_out = None
+    if cfg.family == "encdec":
+        plan = layer_plan(cfg)
+        e = enc_embeds.astype(jnp.dtype(cfg.compute_dtype))
+        e = e + params["enc_pos"][: e.shape[1]].astype(e.dtype)[None]
+        e, _ = _run_stack(cfg, plan.enc_pattern, tuple(params["enc_groups"]),
+                          (), (), None, e, jnp.arange(e.shape[1]), impl=impl)
+        enc_out = apply_norm(cfg, params["enc_norm_f"], e)
+    cache = init_cache(cfg, B, max_len,
+                       enc_len=enc_out.shape[1] if enc_out is not None else 0)
+
+    def body(cache, t):
+        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1) \
+            if tokens is not None else None
+        emb = jax.lax.dynamic_slice_in_dim(embeds, t, 1, axis=1) \
+            if embeds is not None else None
+        logits, cache = decode_step(cfg, params, cache, tok, enc_out=enc_out,
+                                    embeds=emb, impl=impl)
+        return cache, logits
+
+    cache, logits = jax.lax.scan(body, cache, jnp.arange(S))
+    return cache, logits[-1], enc_out

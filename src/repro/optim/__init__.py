@@ -1,0 +1,2 @@
+from .optimizers import (OptimizerSpec, init_opt_state, opt_update,
+                         cosine_schedule, global_norm, clip_by_global_norm)

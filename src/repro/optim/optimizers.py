@@ -1,0 +1,186 @@
+"""Sharded optimizers: AdamW and Adafactor (factored second moment).
+
+AdamW keeps fp32 m/v (12 B/param of state with the fp32 master); Adafactor
+factors the second moment over the last two dims (O(n+m) instead of O(nm))
+and keeps no momentum by default — the T5X recipe that makes 405B-class
+training fit 16 GB/chip meshes (see configs/llama3_405b.py).
+
+Optimizer states inherit the parameter sharding (same logical axes), so
+ZeRO-style partitioning falls out of the parameter PartitionSpecs for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptimizerSpec", "init_opt_state", "opt_update", "cosine_schedule",
+           "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    kind: str = "adamw"             # adamw | adafactor | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999               # adafactor: decay exponent base
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    # adafactor
+    factored_min: int = 128         # factor dims only when both >= this
+    # grad compression (beyond-paper distributed-optimisation trick):
+    # gradients are cast to bf16 before the cross-replica reduction with an
+    # fp32 error-feedback residual kept device-local.
+    compress_grads: bool = False
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int = 100,
+                    total: int = 10_000, min_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def _init_adamw(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _update_adamw(spec, grads, state, params, lr):
+    c = state["count"] + 1
+    b1, b2 = spec.b1, spec.b2
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * jnp.square(gf)
+        mh = m2 / (1 - b1 ** c.astype(jnp.float32))
+        vh = v2 / (1 - b2 ** c.astype(jnp.float32))
+        step = mh / (jnp.sqrt(vh) + spec.eps)
+        if spec.weight_decay:
+            step = step + spec.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": new_m, "v": new_v, "count": c}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no momentum)
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape, min_size) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_size and shape[-2] >= min_size
+
+
+def _init_adafactor(params, spec):
+    def one(p):
+        if _factored(p.shape, spec.factored_min):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"f": jax.tree.map(one, params,
+                              is_leaf=lambda x: isinstance(x, jax.Array)),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _update_adafactor(spec, grads, state, params, lr):
+    c = state["count"] + 1
+    # time-dependent decay (Adafactor schedule)
+    beta2 = 1.0 - c.astype(jnp.float32) ** -0.8
+
+    def upd(g, st, p):
+        gf = g.astype(jnp.float32)
+        g2 = jnp.square(gf) + 1e-30
+        if "vr" in st:
+            vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            rfac = jax.lax.rsqrt(
+                vr / jnp.mean(vr, axis=-1, keepdims=True) + 1e-30)
+            cfac = jax.lax.rsqrt(vc + 1e-30)
+            step = gf * rfac[..., None] * cfac[..., None, :]
+            new_st = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * st["v"] + (1 - beta2) * g2
+            step = gf * jax.lax.rsqrt(v + 1e-30)
+            new_st = {"v": v}
+        # update clipping (Adafactor's d=1.0 RMS clip)
+        rms = jnp.sqrt(jnp.mean(jnp.square(step)) + 1e-30)
+        step = step / jnp.maximum(1.0, rms)
+        if spec.weight_decay:
+            step = step + spec.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), new_st
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["f"])
+    outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in outs])
+    new_f = treedef.unflatten([o[1] for o in outs])
+    return new_p, {"f": new_f, "count": c}
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def init_opt_state(spec: OptimizerSpec, params):
+    if spec.kind == "adamw":
+        return _init_adamw(params)
+    if spec.kind == "adafactor":
+        return _init_adafactor(params, spec)
+    if spec.kind == "sgd":
+        return {"count": jnp.zeros((), jnp.int32)}
+    raise ValueError(f"unknown optimizer {spec.kind}")
+
+
+def opt_update(spec: OptimizerSpec, grads, state, params, lr=None):
+    """Returns (new_params, new_state, metrics)."""
+    lr = lr if lr is not None else spec.lr
+    gnorm = global_norm(grads)
+    if spec.clip_norm:
+        grads, _ = clip_by_global_norm(grads, spec.clip_norm)
+    if spec.kind == "adamw":
+        new_p, new_s = _update_adamw(spec, grads, state, params, lr)
+    elif spec.kind == "adafactor":
+        new_p, new_s = _update_adafactor(spec, grads, state, params, lr)
+    elif spec.kind == "sgd":
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        new_s = {"count": state["count"] + 1}
+    else:
+        raise ValueError(spec.kind)
+    return new_p, new_s, {"grad_norm": gnorm, "lr": jnp.asarray(lr)}

@@ -1,0 +1,2 @@
+from .sharding import (ShardingRules, DEFAULT_RULES, logical, use_rules,
+                       current_rules, named_sharding, logical_spec)

@@ -1,0 +1,169 @@
+"""Path-based logical axes for parameter / optimizer / cache trees.
+
+One central mapping from tree paths to logical axis names (resolved by
+``ShardingRules.spec_for``, which drops non-dividing axes).  This is the
+framework's equivalent of the paper's automatic data distribution: the user
+declares *what* a tensor is (by its place in the tree); the framework
+derives placement.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import NamedSharding
+
+from .sharding import ShardingRules
+
+__all__ = ["axes_for_path", "tree_logical_axes", "tree_shardings",
+           "batch_logical_axes"]
+
+
+def _last(path: Sequence[str], *names: str) -> bool:
+    return len(path) >= 1 and path[-1] in names
+
+
+def _contains(path: Sequence[str], *names: str) -> bool:
+    return any(p in names for p in path)
+
+
+def axes_for_path(path: tuple[str, ...], ndim: int) -> tuple[Any, ...]:
+    """Logical axes for a *parameter* leaf at ``path`` with rank ``ndim``.
+
+    Stacked (scanned) leaves carry a leading group axis — detected by the
+    caller passing the raw ndim; any extra leading dims map to None.
+    """
+    p = [str(x) for x in path]
+
+    def pad(axes: tuple) -> tuple:
+        extra = ndim - len(axes)
+        return (None,) * extra + axes if extra > 0 else axes[-ndim:] if ndim else ()
+
+    # --- embeddings ---------------------------------------------------------
+    if _last(p, "table", "unembed"):
+        return pad(("vocab", "embed_fsdp"))
+    if _last(p, "enc_pos", "dec_pos"):
+        return pad((None, "embed_fsdp"))
+
+    # --- MoE ------------------------------------------------------------------
+    if _contains(p, "moe"):
+        if _last(p, "w") and _contains(p, "router"):
+            return pad(("embed_fsdp", None))
+        if _last(p, "gate", "up") and not _contains(p, "shared"):
+            return pad(("experts", "embed_fsdp", "d_ff"))
+        if _last(p, "down") and not _contains(p, "shared"):
+            return pad(("experts", "d_ff", "embed_fsdp"))
+        if _last(p, "shared_gate"):
+            return pad((None, None))
+        # shared expert falls through to MLP rules below
+
+    # --- attention -------------------------------------------------------------
+    if _contains(p, "attn", "cross"):
+        if _last(p, "w"):
+            if _contains(p, "q", "k", "v"):
+                return pad(("embed_fsdp", "heads_flat"))
+            if _contains(p, "o"):
+                return pad(("heads_flat", "embed_fsdp"))
+        if _last(p, "b"):
+            return pad((None,))
+
+    # --- SSM ----------------------------------------------------------------
+    if _contains(p, "mixer"):
+        if _contains(p, "in_proj") and _last(p, "w"):
+            return pad(("embed_fsdp", "ssm_inner"))
+        if _contains(p, "out_proj") and _last(p, "w"):
+            return pad(("ssm_inner", "embed_fsdp"))
+        if _last(p, "conv_w"):
+            return pad((None, "ssm_inner"))
+        return pad((None,) * ndim)
+
+    # --- MLP -------------------------------------------------------------------
+    if _contains(p, "mlp", "shared"):
+        if _last(p, "w"):
+            if _contains(p, "up", "gate"):
+                return pad(("embed_fsdp", "d_ff"))
+            if _contains(p, "down"):
+                return pad(("d_ff", "embed_fsdp"))
+        if _last(p, "b"):
+            return pad((None,))
+
+    # --- norms / scalars ---------------------------------------------------------
+    return pad((None,) * max(ndim, 0))
+
+
+# KV / SSM cache leaves -------------------------------------------------------
+
+
+def _cache_axes(path: tuple[str, ...], ndim: int) -> tuple:
+    p = [str(x) for x in path]
+    if _last(p, "k", "v"):
+        # cache layout (B, KV, T, D)
+        axes = ("batch", "kv_heads", "kv_seq", None)
+    elif _last(p, "state"):
+        axes = ("batch", "ssm_heads", None, None)
+    elif _last(p, "conv"):
+        axes = ("batch", None, "ssm_inner")
+    elif _last(p, "len"):
+        return ()
+    else:
+        axes = (None,) * ndim
+    extra = ndim - len(axes)
+    return (None,) * extra + axes if extra > 0 else axes[-ndim:]
+
+
+def _opt_transform(path: tuple[str, ...], axes: tuple, ndim: int) -> tuple:
+    """Adafactor factored stats reshape the param axes."""
+    p = [str(x) for x in path]
+    if _last(p, "vr"):
+        return axes[:-1]
+    if _last(p, "vc"):
+        return axes[:-2] + axes[-1:]
+    return axes
+
+
+def tree_logical_axes(tree, *, kind: str = "params"):
+    """Tree of logical-axes tuples matching ``tree``'s structure.
+
+    kind: params | state (TrainState incl. optimizer) | cache
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        keys = tuple(str(getattr(x, "key", getattr(x, "idx", x))) for x in path)
+        ndim = len(getattr(leaf, "shape", ()))
+        if kind == "cache":
+            out.append(_cache_axes(keys, ndim))
+            continue
+        # strip optimizer wrappers to find the parameter path
+        core = tuple(k for k in keys
+                     if k not in ("params", "opt_state", "m", "v", "f",
+                                  "step", "count", "vr", "vc"))
+        if keys and keys[-1] in ("step", "count"):
+            out.append(())
+            continue
+        if keys[-1] in ("vr", "vc"):
+            base = axes_for_path(core, ndim + (1 if keys[-1] == "vr" else 1))
+            out.append(_opt_transform(keys, base, ndim))
+        else:
+            out.append(axes_for_path(core, ndim))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_shardings(tree, rules: ShardingRules, *, kind: str = "params"):
+    """NamedSharding tree for ``tree`` (arrays or ShapeDtypeStructs)."""
+    axes = tree_logical_axes(tree, kind=kind)
+
+    def one(leaf, ax):
+        dims = getattr(leaf, "shape", ())
+        return NamedSharding(rules.mesh, rules.spec_for(ax, dims=dims))
+
+    return jax.tree.map(one, tree, axes)
+
+
+def batch_logical_axes(batch) -> Any:
+    def one_path(path, leaf):
+        ndim = len(leaf.shape)
+        return ("batch",) + (None,) * (ndim - 1)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one_path(p, l) for p, l in flat])

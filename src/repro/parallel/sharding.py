@@ -1,0 +1,157 @@
+"""Logical-axis sharding rules (MaxText-style) + constraint context.
+
+Models annotate tensors with *logical* axis names; a :class:`ShardingRules`
+mapping resolves them to mesh axes.  Outside any rules context the
+annotations are no-ops, so all model code runs unmodified on one device.
+
+Default production mapping (DESIGN.md §5):
+
+  batch        -> ("pod", "data")       data parallel over pods × data axis
+  seq          -> "model"               sequence/context parallelism (activations)
+  kv_seq       -> "model"               KV-cache sequence sharding (decode)
+  kv_seq_long  -> ("data", "model")     500k decode, batch=1: shard KV everywhere
+  heads        -> "model"               tensor parallel attention (when divisible)
+  d_ff         -> "model"               tensor parallel MLP
+  experts      -> "model" (if divisible) expert parallel
+  vocab        -> "model"               sharded embedding/unembedding
+  embed_fsdp   -> ("pod", "data")       parameter-storage sharding (ZeRO-3)
+  ssm_heads    -> "model"               SSD head parallelism
+
+A rule resolving to an axis that does not divide the tensor dim is dropped
+(replication) — divisibility-safe by construction.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingRules", "DEFAULT_RULES", "logical", "use_rules", "current_rules",
+    "named_sharding", "logical_spec", "param_specs_for_tree",
+]
+
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh | None
+    rules: dict[str, Any]   # logical name -> mesh axis | tuple | None
+    enable: bool = True
+
+    def axis_size(self, axis) -> int:
+        if self.mesh is None or axis is None:
+            return 1
+        if isinstance(axis, (tuple, list)):
+            n = 1
+            for a in axis:
+                n *= self.mesh.shape.get(a, 1)
+            return n
+        return self.mesh.shape.get(axis, 1)
+
+    def spec_for(self, names: Sequence[str | None],
+                 dims: Sequence[int] | None = None) -> P:
+        """Resolve logical names to a PartitionSpec; drop non-dividing axes."""
+        out = []
+        used: set[str] = set()
+        for i, name in enumerate(names):
+            axis = self.rules.get(name) if name else None
+            if axis is None:
+                out.append(None)
+                continue
+            flat = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+            # drop axes absent from the mesh, already used, or non-dividing
+            keep = []
+            size = 1
+            for a in flat:
+                if a in used or (self.mesh and a not in self.mesh.shape):
+                    continue
+                s = self.mesh.shape.get(a, 1) if self.mesh else 1
+                if dims is not None and dims[i] % (size * s) != 0:
+                    continue
+                keep.append(a)
+                size *= s
+            for a in keep:
+                used.add(a)
+            if not keep:
+                out.append(None)
+            elif len(keep) == 1:
+                out.append(keep[0])
+            else:
+                out.append(tuple(keep))
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": "model",
+    "dec_seq": None,
+    "kv_seq": "model",
+    "kv_seq_long": ("data", "model"),
+    "heads": "model",
+    "heads_flat": "model",
+    "kv_heads": "model",
+    "d_ff": "model",
+    "ssm_inner": "model",
+    "experts": "model",
+    "moe_capacity": ("pod", "data"),
+    "vocab": "model",
+    "embed": None,
+    "embed_fsdp": ("pod", "data"),
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "layers": None,
+}
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh | None, rules: Mapping[str, Any] | None = None):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = ShardingRules(mesh=mesh, rules=dict(rules or DEFAULT_RULES))
+    try:
+        yield _STATE.rules
+    finally:
+        _STATE.rules = prev
+
+
+def logical(x, *names: str | None):
+    """Apply a logical sharding constraint; no-op outside a rules context."""
+    r = current_rules()
+    if r is None or r.mesh is None or not r.enable:
+        return x
+    spec = r.spec_for(names, dims=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(r.mesh, spec))
+
+
+def logical_spec(names: Sequence[str | None], dims: Sequence[int],
+                 rules: ShardingRules | None = None) -> P:
+    r = rules or current_rules()
+    if r is None:
+        return P()
+    return r.spec_for(names, dims)
+
+
+def named_sharding(names: Sequence[str | None], dims: Sequence[int],
+                   rules: ShardingRules | None = None) -> NamedSharding:
+    r = rules or current_rules()
+    return NamedSharding(r.mesh, r.spec_for(names, dims))
+
+
+def param_specs_for_tree(tree, logical_axes_tree, rules: ShardingRules):
+    """Map a tree of logical-axis tuples to NamedShardings using shapes of
+    ``tree`` (a tree of ShapeDtypeStruct or arrays)."""
+    def one(x, axes):
+        return NamedSharding(rules.mesh, rules.spec_for(axes, dims=x.shape))
+    return jax.tree.map(one, tree, logical_axes_tree)

@@ -1,0 +1,168 @@
+"""Batched serving engine: prefill + decode with slot-based continuous
+batching.
+
+The decode fleet is the HyPar picture one level up (DESIGN.md §4): each
+*slot* is a job whose KV cache is retained device-local (``no_send_back``);
+a finished request frees its slot and a waiting request is prefilled into
+it (``insert``), without disturbing the other slots — dynamic job creation
+at serving time.
+
+Sharding comes from the ambient ``use_rules`` context: the KV cache batch
+axis maps to ("pod","data"), the KV sequence axis to "model"
+(flash-decoding with all-reduce softmax merges; long_500k shards sequence
+over every axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, forward, init_cache, layer_plan
+from repro.models.layers import apply_norm
+from repro.models.transformer import _run_stack  # encoder reuse
+
+__all__ = ["Engine", "SamplingParams"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0       # 0 => greedy
+    top_k: int = 0                 # 0 => no top-k filter
+    stop_token: int = -1           # -1 => never stop early
+
+
+class Engine:
+    """Owns jitted prefill/decode programs for one model + max_len."""
+
+    def __init__(self, cfg: ModelConfig, params, *, batch: int, max_len: int,
+                 donate_cache: bool = True):
+        self.cfg, self.params = cfg, params
+        self.batch, self.max_len = batch, max_len
+
+        def _prefill(params, cache, tokens, embeds, enc_embeds):
+            enc_out = None
+            if cfg.family == "encdec":
+                plan = layer_plan(cfg)
+                e = enc_embeds.astype(jnp.dtype(cfg.compute_dtype))
+                e = e + params["enc_pos"][: e.shape[1]].astype(e.dtype)[None]
+                e, _ = _run_stack(cfg, plan.enc_pattern,
+                                  tuple(params["enc_groups"]), (), (), None,
+                                  e, jnp.arange(e.shape[1]))
+                enc_out = apply_norm(cfg, params["enc_norm_f"], e)
+            logits, cache = decode_step(cfg, params, cache, tokens,
+                                        enc_out=enc_out, embeds=embeds)
+            return logits[:, -1:], cache, enc_out
+
+        def _decode(params, cache, tokens, enc_out):
+            return decode_step(cfg, params, cache, tokens, enc_out=enc_out)
+
+        donate = (1,) if donate_cache else ()
+        self._prefill = jax.jit(_prefill, donate_argnums=donate)
+        self._decode = jax.jit(_decode, donate_argnums=donate)
+        self._enc_out = None
+        self.cache = None
+
+    # -- lifecycle -------------------------------------------------------------
+    def fresh_cache(self):
+        enc_len = 0
+        if self.cfg.family == "encdec":
+            enc_len = 1  # cross K/V recomputed from enc_out, no cache needed
+        return init_cache(self.cfg, self.batch, self.max_len, enc_len=enc_len)
+
+    def prefill(self, tokens=None, *, embeds=None, enc_embeds=None):
+        """tokens: (batch, S). Returns last-position logits (batch, 1, V)."""
+        self.cache = self.fresh_cache()
+        logits, self.cache, self._enc_out = self._prefill(
+            self.params, self.cache, tokens, embeds, enc_embeds)
+        return logits
+
+    def decode(self, tokens):
+        """tokens: (batch, 1) — one step for every slot."""
+        logits, self.cache = self._decode(self.params, self.cache, tokens,
+                                          self._enc_out)
+        return logits
+
+    # -- sampling ----------------------------------------------------------------
+    @staticmethod
+    @functools.partial(jax.jit, static_argnames=("sp",))
+    def _sample(logits, key, sp: SamplingParams):
+        lg = logits[:, -1, :].astype(jnp.float32)
+        if sp.top_k:
+            thresh = jax.lax.top_k(lg, sp.top_k)[0][:, -1:]
+            lg = jnp.where(lg < thresh, -jnp.inf, lg)
+        if sp.temperature <= 0.0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, lg / sp.temperature).astype(jnp.int32)
+
+    def generate(self, tokens, *, max_new: int, sp: SamplingParams = SamplingParams(),
+                 key=None, enc_embeds=None) -> np.ndarray:
+        """Greedy/temperature generation for a full batch.  Returns
+        (batch, max_new) generated ids (stop_token-padded after stop)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        logits = self.prefill(tokens, enc_embeds=enc_embeds)
+        out = []
+        done = np.zeros((tokens.shape[0],), bool)
+        cur = None
+        for i in range(max_new):
+            key, sub = jax.random.split(key)
+            cur = self._sample(logits, sub, sp)
+            ids = np.asarray(cur)
+            if sp.stop_token >= 0:
+                ids = np.where(done, sp.stop_token, ids)
+                done |= ids == sp.stop_token
+            out.append(ids)
+            if done.all():
+                out.extend([np.full_like(ids, sp.stop_token)] *
+                           (max_new - len(out)))
+                break
+            logits = self.decode(jnp.asarray(ids)[:, None])
+        return np.stack(out, axis=1)
+
+    # -- continuous batching -----------------------------------------------------
+    def insert(self, slot: int, tokens_1xS) -> None:
+        """Prefill a single request into slot ``slot`` without disturbing the
+        other slots (slot-local cache splice)."""
+        mini = Engine(self.cfg, self.params, batch=1, max_len=self.max_len,
+                      donate_cache=False)
+        mini.prefill(tokens_1xS)
+
+        def splice(full, one):
+            return jax.lax.dynamic_update_slice_in_dim(full, one, slot, axis=0)
+
+        def splice_tree(full_tree, one_tree):
+            return jax.tree.map(
+                lambda f, o: splice(f, o) if f.ndim >= 1 and o.ndim == f.ndim
+                and f.shape[1:] == o.shape[1:] else f,
+                full_tree, one_tree)
+
+        # per-slot caches share every axis except batch; "len" is global —
+        # per-slot lengths are tracked host-side by the caller
+        new_groups = []
+        for gfull, gone in zip(self.cache["groups"], mini.cache["groups"]):
+            new_groups.append(jax.tree.map(
+                lambda f, o: _splice_batch(f, o, slot), gfull, gone))
+        new_tail = []
+        for tfull, tone in zip(self.cache["tail"], mini.cache["tail"]):
+            new_tail.append(jax.tree.map(
+                lambda f, o: _splice_batch(f, o, slot), tfull, tone))
+        self.cache = {"groups": new_groups, "tail": new_tail,
+                      "len": self.cache["len"]}
+
+
+def _splice_batch(full, one, slot: int):
+    """Insert ``one`` (batch=1 leaf) into ``full`` at batch index ``slot``.
+    Cache leaves have batch as the first axis after the optional group axis."""
+    if full.ndim == one.ndim and full.shape == one.shape:
+        return full  # scalar bookkeeping leaves
+    # group-stacked leaves: (G, B, ...) vs (G, 1, ...)
+    if full.ndim >= 2 and one.shape[0] == full.shape[0] and one.shape[1] == 1:
+        return jax.lax.dynamic_update_slice_in_dim(full, one, slot, axis=1)
+    if one.shape[0] == 1:
+        return jax.lax.dynamic_update_slice_in_dim(full, one, slot, axis=0)
+    return full

@@ -1,0 +1,2 @@
+from .step import TrainState, make_train_step, make_init_fn
+from .hypar_loop import HyParTrainer

@@ -1,0 +1,173 @@
+"""Job-model invariants (paper §2) — unit + hypothesis property tests."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (ChunkedData, ChunkRef, DataChunk, GraphValidationError,
+                        Job, JobGraph, ParallelSegment, format_job_text,
+                        parse_job_text)
+
+
+# ---------------------------------------------------------------------------
+# chunking
+# ---------------------------------------------------------------------------
+
+
+@given(n=st.integers(1, 200), k=st.integers(1, 32))
+@settings(max_examples=50, deadline=None)
+def test_chunking_partition_property(n, k):
+    """from_array splits into <=k non-empty chunks that concatenate back."""
+    arr = np.arange(n, dtype=np.float32)
+    cd = ChunkedData.from_array(arr, min(k, n))
+    assert 1 <= cd.n_chunks() <= min(k, n)
+    np.testing.assert_array_equal(np.asarray(cd.to_array()), arr)
+    assert all(c.n_elem > 0 for c in cd)
+
+
+@given(n=st.integers(2, 64), lo=st.integers(0, 10), width=st.integers(1, 10))
+@settings(max_examples=50, deadline=None)
+def test_chunkref_selection(n, lo, width):
+    cd = ChunkedData.from_array(np.arange(4 * n, dtype=np.float32), n)
+    k = cd.n_chunks()
+    lo = lo % k
+    hi = min(k, lo + width)
+    ref = ChunkRef("J1", lo, hi)
+    sel = ref.select(cd)
+    assert sel.n_chunks() == hi - lo
+    np.testing.assert_array_equal(
+        np.asarray(sel.to_array()),
+        np.concatenate([np.asarray(cd[i].data) for i in range(lo, hi)]))
+
+
+def test_chunkref_out_of_range_rejected():
+    cd = ChunkedData.from_array(np.arange(10.0), 5)
+    with pytest.raises(GraphValidationError):
+        ChunkRef("J1", 3, 9).select(cd)
+    with pytest.raises(GraphValidationError):
+        ChunkRef("J1", 4, 3).select(cd)
+
+
+def test_datachunk_nbytes():
+    c = DataChunk(np.zeros((4, 4), np.float32))
+    assert c.nbytes == 64
+    assert c.n_elem == 16
+
+
+# ---------------------------------------------------------------------------
+# graph structure (paper §2.1 rules)
+# ---------------------------------------------------------------------------
+
+
+def test_same_segment_dependency_rejected():
+    with pytest.raises(GraphValidationError):
+        JobGraph([ParallelSegment([
+            Job("J1", 1, 0),
+            Job("J2", 1, 0, (ChunkRef("J1"),)),
+        ])])
+
+
+def test_forward_dependency_rejected():
+    g = JobGraph()
+    g.add_segment([Job("J1", 1, 0, (ChunkRef("J2"),))]) if False else None
+    with pytest.raises(GraphValidationError):
+        JobGraph([
+            ParallelSegment([Job("J1", 1, 0, (ChunkRef("J2"),))]),
+            ParallelSegment([Job("J2", 1, 0)]),
+        ])
+
+
+def test_duplicate_names_rejected():
+    with pytest.raises(GraphValidationError):
+        JobGraph([ParallelSegment([Job("J1", 1, 0), Job("J1", 2, 0)])])
+
+
+def test_dynamic_jobs_cannot_target_past():
+    g = JobGraph([ParallelSegment([Job("J1", 1, 0)]),
+                  ParallelSegment([Job("J2", 1, 0, (ChunkRef("J1"),))])])
+    with pytest.raises(GraphValidationError):
+        g.add_dynamic(Job("J3", 1, 0), 0, current=1)
+    g.add_dynamic(Job("J3", 1, 0, (ChunkRef("J1"),)), 2, current=1)
+    assert g.segment_of("J3") == 2
+
+
+def test_hybrid_classification():
+    # strict: one segment has >1 job and a multi-sequence job (n_threads!=1)
+    g = JobGraph([ParallelSegment([Job("J1", 1, 0), Job("J2", 1, 1)])])
+    assert g.is_hybrid() == (True, "strict")
+    # loose: multi-job segment and multi-thread job in different segments
+    g2 = JobGraph([
+        ParallelSegment([Job("J1", 1, 1), Job("J2", 2, 1)]),
+        ParallelSegment([Job("J3", 3, 4, (ChunkRef("J1"),))]),
+    ])
+    assert g2.is_hybrid() == (True, "loose")
+    # purely sequential
+    g3 = JobGraph([ParallelSegment([Job("J1", 1, 1)])])
+    assert g3.is_hybrid()[0] is False
+
+
+def test_negative_threads_rejected():
+    with pytest.raises(GraphValidationError):
+        Job("J1", 1, -1)
+
+
+# ---------------------------------------------------------------------------
+# parser (paper §3.3 format)
+# ---------------------------------------------------------------------------
+
+PAPER_SAMPLE = """J1(1,0,0), J2(2,1,0);
+J3(2,2,R1[0..5],true), J4(2,2,R1[5..10],true), J5(3,0,R1 R2),
+ J6(4,0,R1 R2);
+J7(5,1, R2 R3 R4 R5);"""
+
+
+def test_paper_sample_parses():
+    g = parse_job_text(PAPER_SAMPLE)
+    assert len(g.segments) == 3
+    assert g.segments[0].names() == ["J1", "J2"]
+    assert g.segments[1].names() == ["J3", "J4", "J5", "J6"]
+    j3 = g.job("J3")
+    assert j3.fn == 2 and j3.n_threads == 2 and j3.no_send_back
+    assert j3.inputs == (ChunkRef("J1", 0, 5),)
+    j5 = g.job("J5")
+    assert j5.inputs == (ChunkRef("J1"), ChunkRef("J2"))
+    assert not j5.no_send_back
+    j7 = g.job("J7")
+    assert [r.job for r in j7.inputs] == ["J2", "J3", "J4", "J5"]
+
+
+def test_parser_round_trip():
+    g = parse_job_text(PAPER_SAMPLE)
+    text = format_job_text(g)
+    g2 = parse_job_text(text)
+    assert format_job_text(g2) == text
+
+
+@given(st.lists(st.lists(st.tuples(
+    st.integers(1, 9), st.integers(0, 4), st.booleans()),
+    min_size=1, max_size=4), min_size=1, max_size=4))
+@settings(max_examples=30, deadline=None)
+def test_parser_round_trip_random_graphs(spec):
+    """Random DAGs (each job depends on one job of the previous segment)
+    survive a format -> parse -> format round trip."""
+    segments, counter = [], 0
+    prev_names: list[str] = []
+    for seg in spec:
+        jobs = []
+        for fid, nt, nsb in seg:
+            counter += 1
+            deps = (ChunkRef(prev_names[counter % len(prev_names)]),) \
+                if prev_names else ()
+            jobs.append(Job(f"J{counter}", fid, nt, deps, no_send_back=nsb))
+        segments.append(ParallelSegment(jobs))
+        prev_names = [j.name for j in jobs]
+    g = JobGraph(segments)
+    text = format_job_text(g)
+    assert format_job_text(parse_job_text(text)) == text
+
+
+def test_parser_rejects_garbage():
+    for bad in ["J1(1,0", "J1(1)", "J1(1,0,R1[3..2x])", "J1(1,0,0,maybe)"]:
+        with pytest.raises(GraphValidationError):
+            parse_job_text(bad + ";")

@@ -94,8 +94,8 @@ def jacobi_tailored(A, b, *, iters: int = 500, tol: float = 0.0,
 
 
 def jacobi_hypar(A, b, *, iters: int = 500, tol: float = 0.0,
-                 n_chunks: int = 4, cluster: VirtualCluster | None = None
-                 ) -> JacobiResult:
+                 n_chunks: int = 4, cluster: VirtualCluster | None = None,
+                 mode: str = "sync", strategy: str = "greedy") -> JacobiResult:
     n = b.shape[0]
     diag = jnp.diag(A)
     reg = FunctionRegistry()
@@ -184,7 +184,7 @@ def jacobi_hypar(A, b, *, iters: int = 500, tol: float = 0.0,
     graph.add_segment([Job("C0", "check", 1, (ChunkRef("X0"),))])
 
     cluster = cluster or VirtualCluster(n_schedulers=1, max_workers=n_chunks)
-    ex = LocalExecutor(cluster, reg)
+    ex = LocalExecutor(cluster, reg, mode=mode, strategy=strategy)
 
     # warm the jitted user kernels (compile outside the timed region, as for
     # the tailored baseline)
@@ -219,7 +219,7 @@ def jacobi_hypar(A, b, *, iters: int = 500, tol: float = 0.0,
     x = np.asarray(results[f"X{k}"].get_data_chunk(0).data)
     res = float(np.asarray(results[f"X{k}"].get_data_chunk(1).data))
     return JacobiResult(x, k + 1, res, dt,
-                        extra={"report": report.summary(),
+                        extra={"report": report.summary(), "mode": mode,
                                "moved_bytes": report.moved_bytes})
 
 

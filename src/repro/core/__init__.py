@@ -13,17 +13,18 @@ from .job import (ChunkedData, ChunkRef, DataChunk, GraphValidationError, Job,
                   JobGraph, ParallelSegment)
 from .registry import ControlContext, FunctionKind, FunctionRegistry
 from .parser import format_job_text, parse_job_file, parse_job_text
-from .scheduler import (MasterScheduler, Placement, ResultStore, SchedulerProc,
-                        VirtualCluster, Worker)
-from .executor import (ExecutionReport, IterativeSpec, LocalExecutor,
-                       SpmdExecutor)
+from .scheduler import (CostModelParams, MasterScheduler, Placement,
+                        ResultStore, SchedulerProc, VirtualCluster, Worker)
+from .executor import (BaseExecutor, ExecutionReport, IterativeSpec,
+                       LocalExecutor, SpmdExecutor)
 from .fault import ChaosLocalExecutor, FaultInjector, Heartbeat
 
 __all__ = [
     "ChunkedData", "ChunkRef", "DataChunk", "GraphValidationError", "Job",
     "JobGraph", "ParallelSegment", "ControlContext", "FunctionKind",
     "FunctionRegistry", "format_job_text", "parse_job_file", "parse_job_text",
-    "MasterScheduler", "Placement", "ResultStore", "SchedulerProc",
+    "BaseExecutor", "CostModelParams", "MasterScheduler", "Placement",
+    "ResultStore", "SchedulerProc",
     "VirtualCluster", "Worker", "ExecutionReport", "IterativeSpec",
     "LocalExecutor", "SpmdExecutor", "ChaosLocalExecutor", "FaultInjector",
     "Heartbeat",

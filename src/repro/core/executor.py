@@ -1,15 +1,31 @@
 """Executors — how job graphs actually run.
 
-Two backends (DESIGN.md §2):
+All executors implement the :class:`BaseExecutor` contract
+(``run(graph) -> (results, ExecutionReport)``) so launchers, benchmarks and
+apps never special-case the runtime (DESIGN.md §2).
 
 * :class:`LocalExecutor` — the *paper-faithful* runtime.  Workers are pinned
-  to individual JAX devices; jobs are dispatched one by one following the
-  master scheduler's placement plan; chunk transfers between devices are
-  explicit (and accounted), ``no_send_back`` results stay on their worker's
-  device.  Worker failures lose retained results, which are recovered by
-  re-executing the producing jobs from the graph (lineage recovery).
-  Dynamic jobs (control functions) are handled on the host, exactly like the
-  paper's master re-enqueueing mechanism.
+  to individual JAX devices; chunk transfers between devices are explicit
+  (and accounted), ``no_send_back`` results stay on their worker's device.
+  Worker failures lose retained results, which are recovered by re-executing
+  the producing jobs from the graph (lineage recovery).  Dynamic jobs
+  (control functions) are handled on the host, exactly like the paper's
+  master re-enqueueing mechanism.
+
+  Three dispatch modes (DESIGN.md §2.3):
+
+  - ``mode="sync"`` — the paper's loop: placements execute one by one on the
+    host thread; ``block_per_job=True`` additionally waits for each job's
+    device work (precise per-worker timing, e.g. straggler experiments).
+  - ``mode="pipelined"`` — per-worker dispatch queues: every placement of a
+    segment is issued without host-side blocking (JAX async dispatch
+    overlaps ``device_put`` input transfers with compute); the host waits
+    once at the paper's segment barrier.  Control jobs drain on the host as
+    their inputs complete.
+  - ``mode="dataflow"`` — the barrier relaxed to true dataflow: a job in
+    segment *k+1* whose inputs are all available is dispatched before
+    segment *k* fully drains (the paper's strict barrier becomes an opt-in
+    strictness level).
 
 * :class:`SpmdExecutor` — the *beyond-paper* runtime for TPU pods.  A whole
   parallel segment is fused into one SPMD computation: same-function
@@ -21,22 +37,25 @@ Two backends (DESIGN.md §2):
 """
 from __future__ import annotations
 
+import abc
+import concurrent.futures
 import dataclasses
-import functools
+import threading
 import time
-from typing import Any, Callable, Iterable, Mapping, Sequence
+from typing import Any, Callable, Iterable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .job import ChunkedData, ChunkRef, DataChunk, GraphValidationError, Job, JobGraph
+from .job import ChunkedData, DataChunk, GraphValidationError, Job, JobGraph
 from .registry import ControlContext, FunctionKind, FunctionRegistry
-from .scheduler import (MasterScheduler, Placement, ResultStore, VirtualCluster,
-                        Worker)
+from .scheduler import (CostModelParams, MasterScheduler, Placement,
+                        ResultStore, VirtualCluster, Worker)
 
 __all__ = [
     "ExecutionReport",
+    "BaseExecutor",
     "LocalExecutor",
     "SpmdExecutor",
     "IterativeSpec",
@@ -65,6 +84,7 @@ class SegmentReport:
 class ExecutionReport:
     segments: list[SegmentReport] = dataclasses.field(default_factory=list)
     dynamic_jobs_added: int = 0
+    mode: str = "sync"
 
     @property
     def moved_bytes(self) -> int:
@@ -79,22 +99,52 @@ class ExecutionReport:
         return [j for s in self.segments for j in s.recovered_jobs]
 
     def summary(self) -> str:
-        return (f"segments={len(self.segments)} moved={self.moved_bytes}B "
+        return (f"mode={self.mode} segments={len(self.segments)} "
+                f"moved={self.moved_bytes}B "
                 f"local={self.local_bytes}B dynamic={self.dynamic_jobs_added} "
                 f"recovered={len(self.recovered_jobs)}")
+
+
+# ---------------------------------------------------------------------------
+# Unified executor contract
+# ---------------------------------------------------------------------------
+
+
+class BaseExecutor(abc.ABC):
+    """What every runtime must provide: execute a JobGraph, return the
+    results directory plus an :class:`ExecutionReport`.
+
+    Implementations differ in *where* jobs run (per-device workers, SPMD
+    mesh, …) but not in the contract, so ``launch/``, ``benchmarks/`` and
+    ``apps/`` code is runtime-agnostic.
+    """
+
+    registry: FunctionRegistry
+
+    @abc.abstractmethod
+    def run(self, graph: JobGraph, **kwargs
+            ) -> tuple[dict[str, Any], ExecutionReport]:
+        """Execute the whole graph; returns (results by job name, report)."""
 
 
 # ---------------------------------------------------------------------------
 # Local (paper-faithful) executor
 # ---------------------------------------------------------------------------
 
+MODES = ("sync", "pipelined", "dataflow")
 
-class LocalExecutor:
+
+class LocalExecutor(BaseExecutor):
     """Dispatch jobs to per-device workers following the placement plan."""
 
     def __init__(self, cluster: VirtualCluster, registry: FunctionRegistry, *,
                  speculative_slowdown_threshold: float = 2.0,
-                 block_per_job: bool = False):
+                 block_per_job: bool = False,
+                 mode: str = "sync",
+                 strategy: str = "greedy",
+                 cost_params: CostModelParams | None = None):
+        if mode not in MODES:
+            raise ValueError(f"unknown dispatch mode {mode!r}; pick from {MODES}")
         self.cluster = cluster
         self.registry = registry
         self.store = ResultStore(cluster)
@@ -104,13 +154,44 @@ class LocalExecutor:
         # (block_per_job=True restores per-job waits for precise worker
         # timing, e.g. in straggler experiments)
         self.block_per_job = block_per_job
+        self.mode = mode
+        self.strategy = strategy
+        self.cost_params = cost_params
         self._jit_cache: dict[Any, Callable] = {}
+        # serialises store/report/graph mutation when worker queues dispatch
+        # from threads; reentrant because lineage recovery recurses into
+        # _execute_on
+        self._lock = threading.RLock()
+        self._queues: dict[int, concurrent.futures.ThreadPoolExecutor] = {}
+        self._inflight: dict[int, int] = {}
+        self._master: MasterScheduler | None = None
 
     # -- plumbing ----------------------------------------------------------------
     def _jitted(self, fid) -> Callable:
-        if fid not in self._jit_cache:
-            self._jit_cache[fid] = jax.jit(self.registry[fid].fn)
-        return self._jit_cache[fid]
+        with self._lock:
+            if fid not in self._jit_cache:
+                fn = self.registry[fid].fn
+                # already-jitted user functions are reused as-is so their
+                # compile cache survives across executors (the paper's users
+                # register *compiled* functions)
+                self._jit_cache[fid] = fn if hasattr(fn, "lower") else jax.jit(fn)
+            return self._jit_cache[fid]
+
+    def _queue(self, wid: int) -> concurrent.futures.ThreadPoolExecutor:
+        """One single-threaded dispatch queue per worker: jobs placed on a
+        worker issue in placement order, workers issue concurrently."""
+        q = self._queues.get(wid)
+        if q is None:
+            q = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix=f"hypar-w{wid}")
+            self._queues[wid] = q
+        return q
+
+    def _shutdown_queues(self) -> None:
+        for q in self._queues.values():
+            q.shutdown(wait=True)
+        self._queues.clear()
+        self._inflight.clear()
 
     def _resolve_inputs(self, job: Job, graph: JobGraph, report: SegmentReport,
                         worker: Worker) -> list[ChunkedData]:
@@ -164,9 +245,18 @@ class LocalExecutor:
     # -- execution ----------------------------------------------------------------
     def _execute_on(self, job: Job, worker: Worker, graph: JobGraph,
                     report: SegmentReport,
-                    ctx: ControlContext | None = None) -> ChunkedData:
+                    ctx: ControlContext | None = None) -> tuple[ChunkedData, float]:
+        """Resolve inputs, run the registered function, record the result.
+
+        The dispatch lock is held only around shared-state access (store
+        reads + recovery + report counters, then store.put + feedback) and
+        for the whole control branch (graph mutation); chunkwise/whole
+        dispatch itself runs unlocked so worker queues overlap transfers
+        and compiled-function dispatch.
+        """
         rf = self.registry[job.fn]
-        inputs = self._resolve_inputs(job, graph, report, worker)
+        with self._lock:
+            inputs = self._resolve_inputs(job, graph, report, worker)
         t0 = time.perf_counter()
         if rf.kind == FunctionKind.CHUNKWISE:
             if not inputs:
@@ -182,18 +272,19 @@ class LocalExecutor:
                 out = ChunkedData.from_arrays(
                     out if isinstance(out, (list, tuple)) else [out])
         elif rf.kind == FunctionKind.CONTROL:
-            if ctx is None:
-                ctx = ControlContext(graph, job.segment)
-            host_inputs = [ChunkedData([DataChunk(np.asarray(c.data)) for c in cd])
-                           for cd in inputs]
-            out = rf.fn(*host_inputs, ctx)
-            if out is None:
-                out = ChunkedData([])
-            elif not isinstance(out, ChunkedData):
-                out = ChunkedData.from_arrays(
-                    out if isinstance(out, (list, tuple)) else [out])
-            for new_job, seg_idx in ctx.added:
-                graph.add_dynamic(new_job, seg_idx, current=job.segment)
+            with self._lock:
+                if ctx is None:
+                    ctx = ControlContext(graph, job.segment)
+                host_inputs = [ChunkedData([DataChunk(np.asarray(c.data))
+                                            for c in cd]) for cd in inputs]
+                out = rf.fn(*host_inputs, ctx)
+                if out is None:
+                    out = ChunkedData([])
+                elif not isinstance(out, ChunkedData):
+                    out = ChunkedData.from_arrays(
+                        out if isinstance(out, (list, tuple)) else [out])
+                for new_job, seg_idx in ctx.added:
+                    graph.add_dynamic(new_job, seg_idx, current=job.segment)
         else:  # pragma: no cover
             raise GraphValidationError(f"unknown kind {rf.kind}")
         if self.block_per_job:
@@ -201,65 +292,256 @@ class LocalExecutor:
                 if isinstance(c.data, jax.Array):
                     c.data.block_until_ready()
         elapsed = time.perf_counter() - t0
-        worker.jobs_done += 1
-        self.store.put(job, out, worker)
+        with self._lock:
+            worker.jobs_done += 1
+            self.store.put(job, out, worker)
+            if self._master is not None:
+                self._master.observe(job.fn, elapsed)
         return out, elapsed
 
-    def run(self, graph: JobGraph, *, release_consumed: bool = False) -> tuple[dict, ExecutionReport]:
+    def _maybe_speculate(self, p: Placement, sreport: SegmentReport) -> Worker:
+        """Straggler mitigation: speculatively duplicate on a faster worker
+        when the chosen one is degraded."""
+        worker = p.worker
+        if (worker.slowdown >= self.speculative_slowdown_threshold
+                and len(self.cluster.alive_workers()) > 1):
+            fast = min((w for w in self.cluster.alive_workers()
+                        if w.wid != worker.wid),
+                       key=lambda w: w.slowdown)
+            if fast.slowdown < worker.slowdown:
+                sreport.speculated_jobs.append(p.job.name)
+                worker = fast
+        return worker
+
+    def _segment_barrier(self, names: Iterable[str]) -> None:
+        """The paper's segment barrier: wait for every job of the segment."""
+        for name in names:
+            rec = self.store.records.get(name)
+            if rec is not None and rec.data is not None:
+                for c in rec.data:
+                    if isinstance(c.data, jax.Array):
+                        c.data.block_until_ready()
+
+    def run(self, graph: JobGraph, *, release_consumed: bool = False
+            ) -> tuple[dict, ExecutionReport]:
         """Execute the whole graph; returns (results by job name, report).
 
         ``release_consumed`` — after a segment completes, release results
         whose every consumer has already run (the paper's scheduler "signals
         them the data is no longer required").
         """
-        report = ExecutionReport()
-        master = MasterScheduler(graph, self.cluster)
+        report = ExecutionReport(mode=self.mode)
+        self._master = MasterScheduler(graph, self.cluster,
+                                       strategy=self.strategy,
+                                       cost_params=self.cost_params)
+        try:
+            if self.mode == "sync":
+                self._run_sync(graph, report, release_consumed)
+            elif self.mode == "pipelined":
+                self._run_pipelined(graph, report, release_consumed)
+            else:
+                self._run_dataflow(graph, report, release_consumed)
+        finally:
+            self._shutdown_queues()
+            self._master = None
+        results = {name: rec.data for name, rec in self.store.records.items()
+                   if rec.data is not None}
+        return results, report
+
+    # -- mode: sync (the paper's dispatch loop) --------------------------------
+    def _run_sync(self, graph: JobGraph, report: ExecutionReport,
+                  release_consumed: bool) -> None:
+        master = self._master
         seg_idx = 0
         while seg_idx < len(graph.segments):
             segment = graph.segments[seg_idx]
             sreport = SegmentReport(index=seg_idx, jobs=list(segment.names()))
             t0 = time.perf_counter()
-            placements = master.plan_segment(segment.jobs, self.store)
             worker_time: dict[int, float] = {}
             n_dynamic_before = sum(len(s) for s in graph.segments)
-            for p in placements:
-                if p.co_scheduled_with:
-                    sreport.co_scheduled.append((p.job.name,) + p.co_scheduled_with)
-                worker = p.worker
-                ctx = ControlContext(graph, seg_idx)
-                # straggler mitigation: speculatively duplicate on a faster
-                # worker when the chosen one is degraded
-                if (worker.slowdown >= self.speculative_slowdown_threshold
-                        and len(self.cluster.alive_workers()) > 1):
-                    fast = min((w for w in self.cluster.alive_workers()
-                                if w.wid != worker.wid),
-                               key=lambda w: w.slowdown)
-                    if fast.slowdown < worker.slowdown:
-                        sreport.speculated_jobs.append(p.job.name)
-                        worker = fast
-                _, elapsed = self._execute_on(p.job, worker, graph, sreport, ctx)
-                worker_time[worker.wid] = worker_time.get(worker.wid, 0.0) \
-                    + elapsed * worker.slowdown
-            n_dynamic_after = sum(len(s) for s in graph.segments)
-            report.dynamic_jobs_added += max(0, n_dynamic_after - n_dynamic_before
-                                             - 0)
-            if not self.block_per_job:
-                # paper's segment barrier: wait for every job of the segment
+            executed: set[str] = set()
+            # fixpoint over same-segment dynamic additions: control jobs may
+            # add to the *current* segment, which needs a re-plan pass
+            pending = list(segment.jobs)
+            while pending:
+                placements = master.plan_segment(pending, self.store)
                 for p in placements:
-                    rec = self.store.records.get(p.job.name)
-                    if rec is not None and rec.data is not None:
-                        for c in rec.data:
-                            if isinstance(c.data, jax.Array):
-                                c.data.block_until_ready()
+                    if p.co_scheduled_with:
+                        sreport.co_scheduled.append((p.job.name,) + p.co_scheduled_with)
+                    worker = self._maybe_speculate(p, sreport)
+                    ctx = ControlContext(graph, seg_idx)
+                    _, elapsed = self._execute_on(p.job, worker, graph, sreport, ctx)
+                    worker_time[worker.wid] = worker_time.get(worker.wid, 0.0) \
+                        + elapsed * worker.slowdown
+                    executed.add(p.job.name)
+                pending = [j for j in segment.jobs if j.name not in executed]
+            n_dynamic_after = sum(len(s) for s in graph.segments)
+            report.dynamic_jobs_added += max(0, n_dynamic_after - n_dynamic_before)
+            if not self.block_per_job:
+                self._segment_barrier(executed)
+            sreport.jobs = list(segment.names())
             sreport.sim_makespan = max(worker_time.values(), default=0.0)
             sreport.wall_time = time.perf_counter() - t0
             report.segments.append(sreport)
             if release_consumed:
                 self._release_dead_results(graph, seg_idx)
             seg_idx += 1
-        results = {name: rec.data for name, rec in self.store.records.items()
-                   if rec.data is not None}
-        return results, report
+
+    # -- mode: pipelined (per-worker queues, strict segment barrier) -----------
+    def _run_pipelined(self, graph: JobGraph, report: ExecutionReport,
+                       release_consumed: bool) -> None:
+        master = self._master
+        seg_idx = 0
+        while seg_idx < len(graph.segments):
+            segment = graph.segments[seg_idx]
+            sreport = SegmentReport(index=seg_idx, jobs=list(segment.names()))
+            t0 = time.perf_counter()
+            worker_time: dict[int, float] = {}
+            n_dynamic_before = sum(len(s) for s in graph.segments)
+            executed: set[str] = set()
+            pending = list(segment.jobs)
+            while pending:
+                placements = master.plan_segment(pending, self.store)
+                futures: dict[str, tuple[concurrent.futures.Future, Worker]] = {}
+                for p in placements:
+                    if p.co_scheduled_with:
+                        sreport.co_scheduled.append((p.job.name,) + p.co_scheduled_with)
+                    worker = self._maybe_speculate(p, sreport)
+                    executed.add(p.job.name)
+                    if self.registry[p.job.fn].kind == FunctionKind.CONTROL:
+                        # host job: all deps live in earlier (drained)
+                        # segments, so it runs immediately on the host thread
+                        # while device queues fill
+                        ctx = ControlContext(graph, seg_idx)
+                        _, elapsed = self._execute_on(p.job, worker, graph,
+                                                      sreport, ctx)
+                        worker_time[worker.wid] = worker_time.get(worker.wid, 0.0) \
+                            + elapsed * worker.slowdown
+                    else:
+                        fut = self._queue(worker.wid).submit(
+                            self._execute_on, p.job, worker, graph, sreport)
+                        futures[p.job.name] = (fut, worker)
+                for name, (fut, worker) in futures.items():
+                    _, elapsed = fut.result()  # re-raises worker exceptions
+                    worker_time[worker.wid] = worker_time.get(worker.wid, 0.0) \
+                        + elapsed * worker.slowdown
+                pending = [j for j in segment.jobs if j.name not in executed]
+            n_dynamic_after = sum(len(s) for s in graph.segments)
+            report.dynamic_jobs_added += max(0, n_dynamic_after - n_dynamic_before)
+            self._segment_barrier(executed)
+            sreport.jobs = list(segment.names())
+            sreport.sim_makespan = max(worker_time.values(), default=0.0)
+            sreport.wall_time = time.perf_counter() - t0
+            report.segments.append(sreport)
+            if release_consumed:
+                self._release_dead_results(graph, seg_idx)
+            seg_idx += 1
+
+    # -- mode: dataflow (relaxed barrier, FIRST_COMPLETED draining) ------------
+    def _run_dataflow(self, graph: JobGraph, report: ExecutionReport,
+                      release_consumed: bool) -> None:
+        """Dependency-driven dispatch across segment boundaries.
+
+        A job is dispatchable once every producer it references has finished
+        *dispatching* (its result handle exists; device compute may still be
+        in flight — JAX chains the data dependency).  Control jobs run on
+        the host as their inputs complete, orco-style: the driver drains
+        whichever future finishes first rather than a whole segment.
+        """
+        master = self._master
+        t_run0 = time.perf_counter()
+        futures: dict[str, tuple[concurrent.futures.Future, Worker, int]] = {}
+        done: set[str] = set()          # device jobs with completed dispatch
+        host_done: set[str] = set()     # executed control jobs
+        seg_reports: dict[int, SegmentReport] = {}
+        seg_t0: dict[int, float] = {}
+        worker_time: dict[int, dict[int, float]] = {}
+
+        def sreport_for(seg: int) -> SegmentReport:
+            if seg not in seg_reports:
+                seg_reports[seg] = SegmentReport(index=seg)
+                seg_t0[seg] = time.perf_counter()
+            return seg_reports[seg]
+
+        def harvest() -> None:
+            for name, (fut, worker, seg) in list(futures.items()):
+                if name in done or not fut.done():
+                    continue
+                _, elapsed = fut.result()
+                wt = worker_time.setdefault(seg, {})
+                wt[worker.wid] = wt.get(worker.wid, 0.0) + elapsed * worker.slowdown
+                with self._lock:
+                    self._inflight[worker.wid] = max(
+                        0, self._inflight.get(worker.wid, 0) - 1)
+                done.add(name)
+                sreport_for(seg).wall_time = time.perf_counter() - seg_t0[seg]
+
+        while True:
+            harvest()
+            finished = done | host_done
+            pending = [j for j in graph.jobs()
+                       if j.name not in futures and j.name not in host_done]
+            waiting = [f for n, (f, _, _) in futures.items() if n not in done]
+            if not pending:
+                # drain before declaring done: only harvest() observes
+                # results, so a future completing between harvest() and
+                # here must not be skipped (it may hold an exception)
+                if not waiting:
+                    break
+                concurrent.futures.wait(
+                    waiting, return_when=concurrent.futures.FIRST_COMPLETED)
+                continue
+            ready = [j for j in pending
+                     if all(d in finished for d in j.deps())]
+            if not ready:
+                if not waiting:  # pragma: no cover - valid graphs always progress
+                    raise GraphValidationError(
+                        f"dataflow deadlock: {[j.name for j in pending]} not ready")
+                concurrent.futures.wait(
+                    waiting, return_when=concurrent.futures.FIRST_COMPLETED)
+                continue
+            controls = [j for j in ready
+                        if self.registry[j.fn].kind == FunctionKind.CONTROL]
+            device_jobs = [j for j in ready if j not in controls]
+            if device_jobs:
+                with self._lock:
+                    loads = dict(self._inflight)
+                    placements = master.plan_segment(device_jobs, self.store,
+                                                     loads=loads)
+                for p in placements:
+                    sr = sreport_for(p.job.segment)
+                    if p.co_scheduled_with:
+                        sr.co_scheduled.append((p.job.name,) + p.co_scheduled_with)
+                    worker = self._maybe_speculate(p, sr)
+                    with self._lock:
+                        self._inflight[worker.wid] = \
+                            self._inflight.get(worker.wid, 0) + 1
+                    fut = self._queue(worker.wid).submit(
+                        self._execute_on, p.job, worker, graph, sr)
+                    futures[p.job.name] = (fut, worker, p.job.segment)
+            for job in sorted(controls, key=lambda j: (j.segment, j.name)):
+                sr = sreport_for(job.segment)
+                worker = (self.cluster.alive_workers()
+                          or [self.cluster.spawn_worker()])[0]
+                ctx = ControlContext(graph, job.segment)
+                _, elapsed = self._execute_on(job, worker, graph, sr, ctx)
+                report.dynamic_jobs_added += len(ctx.added)
+                wt = worker_time.setdefault(job.segment, {})
+                wt[worker.wid] = wt.get(worker.wid, 0.0) + elapsed * worker.slowdown
+                host_done.add(job.name)
+                sr.wall_time = time.perf_counter() - seg_t0[job.segment]
+
+        # final barrier: everything must be device-complete before results
+        # are handed back
+        self._segment_barrier(done | host_done)
+        for seg, sr in sorted(seg_reports.items()):
+            sr.jobs = (graph.segments[seg].names()
+                       if seg < len(graph.segments) else [])
+            sr.sim_makespan = max(worker_time.get(seg, {}).values(), default=0.0)
+            report.segments.append(sr)
+        if release_consumed:
+            for seg in range(len(graph.segments)):
+                self._release_dead_results(graph, seg)
 
     def _release_dead_results(self, graph: JobGraph, done_segment: int) -> None:
         for name, rec in self.store.records.items():
@@ -292,7 +574,7 @@ class IterativeSpec:
     max_iters: int = 10_000
 
 
-class SpmdExecutor:
+class SpmdExecutor(BaseExecutor):
     """Fuse segments into SPMD computations over a device mesh.
 
     Same-function chunkwise job groups in a segment are stacked over the
@@ -357,8 +639,12 @@ class SpmdExecutor:
                 out_shardings=out_sh)
         return self._compiled[key]
 
-    def run(self, graph: JobGraph) -> dict[str, Any]:
+    def run(self, graph: JobGraph) -> tuple[dict[str, Any], ExecutionReport]:
+        report = ExecutionReport(mode="spmd")
         for seg_idx, segment in enumerate(graph.segments):
+            sreport = SegmentReport(index=seg_idx, jobs=list(segment.names()))
+            t0 = time.perf_counter()
+            n_dynamic_before = sum(len(s) for s in graph.segments)
             # group same-function chunkwise jobs (worker co-scheduling,
             # generalised: ONE sharded call executes the whole group)
             groups: dict[Any, list[Job]] = {}
@@ -370,6 +656,8 @@ class SpmdExecutor:
                 else:
                     singles.append(job)
             for fid, jobs in groups.items():
+                if len(jobs) > 1:
+                    sreport.co_scheduled.append(tuple(j.name for j in jobs))
                 ins = [self._stacked_input(j, graph) for j in jobs]
                 counts = [i[0].shape[0] for i in ins]
                 stacked = [jnp.concatenate([i[k] for i in ins], axis=0)
@@ -399,7 +687,12 @@ class SpmdExecutor:
                         graph.add_dynamic(new_job, tgt, current=seg_idx)
                 else:  # pragma: no cover
                     raise GraphValidationError(f"unsupported kind {rf.kind}")
-        return dict(self.results)
+            report.dynamic_jobs_added += max(
+                0, sum(len(s) for s in graph.segments) - n_dynamic_before)
+            sreport.jobs = list(segment.names())
+            sreport.wall_time = time.perf_counter() - t0
+            report.segments.append(sreport)
+        return dict(self.results), report
 
     # -- iterative fusion (beyond-paper: dynamic-job loop -> while_loop) --------
     def run_iterative(self, spec: IterativeSpec, carry):

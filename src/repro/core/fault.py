@@ -20,9 +20,8 @@ complete checkpoint (see repro.checkpoint) on a possibly different mesh
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterable
 
-from .executor import ExecutionReport, LocalExecutor, SegmentReport
+from .executor import LocalExecutor
 from .job import Job, JobGraph
 from .registry import FunctionRegistry
 from .scheduler import ResultStore, VirtualCluster, Worker
@@ -95,7 +94,13 @@ class Heartbeat:
 
 class ChaosLocalExecutor(LocalExecutor):
     """LocalExecutor wired to a FaultInjector — used by tests/benchmarks to
-    prove the recovery path (re-execution from the job graph) works."""
+    prove the recovery path (re-execution from the job graph) works.
+
+    Works in every dispatch mode: with ``mode="pipelined"``/``"dataflow"``
+    the kill check runs on the worker-queue threads, so it takes the
+    executor's dispatch lock — a kill observed by one in-flight job is
+    immediately visible to every other queue (the async-recovery contract of
+    DESIGN.md §6)."""
 
     def __init__(self, cluster: VirtualCluster, registry: FunctionRegistry,
                  injector: FaultInjector, **kw):
@@ -110,12 +115,13 @@ class ChaosLocalExecutor(LocalExecutor):
         return super().run(graph, **kw)
 
     def _execute_on(self, job, worker, graph, report, ctx=None):
-        self.injector.maybe_kill(self.cluster, self.store, segment=job.segment)
-        if not worker.alive:
-            # the scheduler would notice the dead worker and re-place
-            alive = self.cluster.alive_workers()
-            worker = (min(alive, key=lambda w: w.jobs_done) if alive
-                      else self.cluster.spawn_worker())
-        out = super()._execute_on(job, worker, graph, report, ctx)
-        self.injector.maybe_kill(self.cluster, self.store, segment=job.segment)
-        return out
+        with self._lock:
+            self.injector.maybe_kill(self.cluster, self.store, segment=job.segment)
+            if not worker.alive:
+                # the scheduler would notice the dead worker and re-place
+                alive = self.cluster.alive_workers()
+                worker = (min(alive, key=lambda w: w.jobs_done) if alive
+                          else self.cluster.spawn_worker())
+            out = super()._execute_on(job, worker, graph, report, ctx)
+            self.injector.maybe_kill(self.cluster, self.store, segment=job.segment)
+            return out

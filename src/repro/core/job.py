@@ -193,6 +193,10 @@ class Job:
     ``no_send_back``  — paper's optional 4th argument: results stay on the
                         worker (device-local), only a completion message is
                         sent to the scheduler.
+    ``cost_hint``     — estimated useful FLOPs of one execution; consumed by
+                        the cost-model placement strategy (DESIGN.md §5).
+                        0.0 ⇒ unknown (the scheduler falls back to a
+                        bytes-based roofline bound).
     """
 
     name: str
@@ -200,6 +204,7 @@ class Job:
     n_threads: int = 0
     inputs: tuple[ChunkRef, ...] = ()
     no_send_back: bool = False
+    cost_hint: float = 0.0
     # runtime metadata (not part of the paper's definition)
     segment: int = -1
 

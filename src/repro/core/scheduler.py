@@ -20,8 +20,7 @@ minimises (locality-aware scheduling = the paper's result-retention idea).
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import Any, Iterable, Mapping, Sequence
+from typing import Any, Mapping, Sequence
 
 import jax
 import numpy as np
@@ -35,6 +34,7 @@ __all__ = [
     "ResultRecord",
     "ResultStore",
     "Placement",
+    "CostModelParams",
     "MasterScheduler",
 ]
 
@@ -96,7 +96,9 @@ class VirtualCluster:
 
     # -- paper: workers are spawned during runtime -----------------------------
     def spawn_worker(self, scheduler_rank: int | None = None) -> Worker:
-        if len(self.workers) >= self.max_workers:
+        # dead workers release their slot — recovery must be able to spawn a
+        # replacement even when the cluster was at capacity (DESIGN.md §6)
+        if len(self.alive_workers()) >= self.max_workers:
             raise RuntimeError(f"cannot spawn more than {self.max_workers} workers")
         wid = len(self.workers)
         sched = scheduler_rank or (wid % self.n_schedulers) + 1
@@ -206,25 +208,95 @@ class Placement:
     co_scheduled_with: tuple[str, ...] = ()
     local_bytes: int = 0          # input bytes already resident on the worker
     moved_bytes: int = 0          # input bytes that must be transferred
+    est_cost_s: float = 0.0       # cost-model estimate (strategy="cost" only)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModelParams:
+    """Hardware constants for the cost-model placement strategy.
+
+    The three terms mirror the roofline decomposition of
+    ``repro.analysis.roofline`` (compute / memory / interconnect); use
+    :meth:`from_hw` to derive them from an ``analysis.roofline.HW`` profile
+    (e.g. ``V5E``).  Defaults are a conservative host-CPU profile so the
+    model produces sane *relative* costs out of the box.
+    """
+
+    peak_flops: float = 100e9     # per worker
+    mem_bw: float = 20e9          # B/s local (worker-resident) reads
+    link_bw: float = 5e9          # B/s cross-worker transfers
+    dispatch_s: float = 50e-6     # fixed per-job dispatch overhead
+
+    @classmethod
+    def from_hw(cls, hw) -> "CostModelParams":
+        """Build from any object with peak_flops / hbm_bw / ici_bw attrs
+        (duck-typed so core never imports repro.analysis)."""
+        return cls(peak_flops=hw.peak_flops, mem_bw=hw.hbm_bw,
+                   link_bw=hw.ici_bw)
 
 
 class MasterScheduler:
     """Rank-0 process: owns the JobGraph, computes placements, stores no data.
 
-    Placement policy (greedy, deterministic):
+    Two selectable placement strategies:
+
+    ``strategy="greedy"`` (default, paper-faithful):
       1. locality first — place a job where the most input bytes already live
          (generalises the paper's ``no_send_back`` retention),
       2. then least-loaded worker,
       3. co-schedule same-function jobs onto one worker while their combined
          thread demand fits its cores (paper §3.3's 2×2-threads-on-4-cores
          example).
+
+    ``strategy="cost"`` (DESIGN.md §5): per candidate worker estimate
+
+        cost = moved_bytes / link_bw                     (transfer)
+             + queue_depth * observed_fn_time            (queueing)
+             + max(flops_hint / peak, in_bytes / mem_bw) (roofline compute)
+               * worker.slowdown
+
+      and place on the argmin.  ``flops_hint`` comes from ``Job.cost_hint``;
+      observed per-function wall times are fed back by the executor through
+      :meth:`observe` (EWMA), so the queue term sharpens as the run
+      progresses.  Co-scheduling is honoured in both strategies.
+
     Workers are spawned on demand (paper: "dynamically created during
     runtime"), up to the cluster limit.
     """
 
-    def __init__(self, graph: JobGraph, cluster: VirtualCluster):
+    def __init__(self, graph: JobGraph, cluster: VirtualCluster, *,
+                 strategy: str = "greedy",
+                 cost_params: CostModelParams | None = None):
+        if strategy not in ("greedy", "cost"):
+            raise ValueError(f"unknown placement strategy {strategy!r}")
         self.graph = graph
         self.cluster = cluster
+        self.strategy = strategy
+        self.cost_params = cost_params or CostModelParams()
+        # EWMA of observed wall time per function id (cost-model queue term)
+        self._fn_time: dict[Any, float] = {}
+
+    # -- runtime feedback (executor -> master) ---------------------------------
+    def observe(self, fid, elapsed_s: float, alpha: float = 0.3) -> None:
+        prev = self._fn_time.get(fid)
+        self._fn_time[fid] = (elapsed_s if prev is None
+                              else (1 - alpha) * prev + alpha * elapsed_s)
+
+    def _est_fn_time(self, fid) -> float:
+        if fid in self._fn_time:
+            return self._fn_time[fid]
+        times = list(self._fn_time.values())
+        return float(np.mean(times)) if times else self.cost_params.dispatch_s
+
+    def _est_job_cost(self, job: Job, worker: Worker, *, total_in: int,
+                      local: int, queue_depth: int) -> float:
+        p = self.cost_params
+        moved = total_in - local
+        transfer_s = moved / p.link_bw
+        queue_s = queue_depth * self._est_fn_time(job.fn)
+        compute_s = max(job.cost_hint / p.peak_flops,
+                        total_in / p.mem_bw) * worker.slowdown
+        return p.dispatch_s + transfer_s + queue_s + compute_s
 
     # -- helpers ---------------------------------------------------------------
     def _input_bytes_by_location(self, job: Job, store: ResultStore) -> dict[int | None, int]:
@@ -267,28 +339,13 @@ class MasterScheduler:
                     break
 
             if placed is None:
-                # locality-preferred worker
-                best_wid, best_bytes = None, -1
-                for loc, nb in sorted(by_loc.items(), key=lambda kv: (-kv[1], str(kv[0]))):
-                    if loc is None:
-                        continue
-                    w = self.cluster.workers[loc]
-                    if w.alive and nb > best_bytes:
-                        best_wid, best_bytes = loc, nb
-                if best_wid is not None and best_bytes > 0:
-                    w = self.cluster.workers[best_wid]
+                if self.strategy == "cost":
+                    w, est = self._choose_worker_cost(job, by_loc, total_in, loads)
                 else:
-                    # least-loaded alive worker, else spawn
-                    alive = self.cluster.alive_workers()
-                    free = [w for w in alive if loads.get(w.wid, 0) == 0]
-                    if not free and len(self.cluster.workers) < self.cluster.max_workers:
-                        w = self.cluster.spawn_worker()
-                    elif alive:
-                        w = min(alive, key=lambda w: (loads.get(w.wid, 0), w.wid))
-                    else:
-                        w = self.cluster.spawn_worker()
+                    w, est = self._choose_worker_greedy(job, by_loc, loads), 0.0
                 n_seq = min(want, w.cores) if want > 0 else w.cores
-                placed = Placement(job=job, worker=w, n_sequences=max(n_seq, 1))
+                placed = Placement(job=job, worker=w, n_sequences=max(n_seq, 1),
+                                   est_cost_s=est)
 
             local = by_loc.get(placed.worker.wid, 0)
             placed.local_bytes = local
@@ -301,3 +358,51 @@ class MasterScheduler:
         idx = {j.name: i for i, j in enumerate(segment_jobs)}
         placements.sort(key=lambda p: idx[p.job.name])
         return placements
+
+    # -- worker choice ---------------------------------------------------------
+    def _choose_worker_greedy(self, job: Job, by_loc: Mapping[int | None, int],
+                              loads: Mapping[int, int]) -> Worker:
+        """Locality first, then least-loaded alive worker, else spawn."""
+        best_wid, best_bytes = None, -1
+        for loc, nb in sorted(by_loc.items(), key=lambda kv: (-kv[1], str(kv[0]))):
+            if loc is None:
+                continue
+            w = self.cluster.workers[loc]
+            if w.alive and nb > best_bytes:
+                best_wid, best_bytes = loc, nb
+        if best_wid is not None and best_bytes > 0:
+            return self.cluster.workers[best_wid]
+        alive = self.cluster.alive_workers()
+        free = [w for w in alive if loads.get(w.wid, 0) == 0]
+        if not free and len(alive) < self.cluster.max_workers:
+            return self.cluster.spawn_worker()
+        if alive:
+            return min(alive, key=lambda w: (loads.get(w.wid, 0), w.wid))
+        return self.cluster.spawn_worker()
+
+    def _choose_worker_cost(self, job: Job, by_loc: Mapping[int | None, int],
+                            total_in: int, loads: Mapping[int, int]
+                            ) -> tuple[Worker, float]:
+        """Argmin of the three-term cost estimate over all candidates.
+
+        A to-be-spawned worker is one candidate (zero queue depth, zero
+        locality) so the model decides between reusing a loaded worker with
+        the data and paying the transfer to an idle one.
+        """
+        candidates: list[tuple[float, int, Worker | None]] = []
+        for w in self.cluster.alive_workers():
+            cost = self._est_job_cost(
+                job, w, total_in=total_in, local=by_loc.get(w.wid, 0),
+                queue_depth=loads.get(w.wid, 0))
+            candidates.append((cost, w.wid, w))
+        if len(self.cluster.alive_workers()) < self.cluster.max_workers:
+            ghost = Worker(wid=len(self.cluster.workers), device=None)
+            cost = self._est_job_cost(job, ghost, total_in=total_in, local=0,
+                                      queue_depth=0)
+            candidates.append((cost, ghost.wid, None))
+        if not candidates:
+            return self.cluster.spawn_worker(), 0.0
+        cost, _, w = min(candidates, key=lambda c: (c[0], c[1]))
+        if w is None:
+            w = self.cluster.spawn_worker()
+        return w, cost

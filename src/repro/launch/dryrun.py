@@ -26,6 +26,7 @@ import traceback
 
 import jax
 
+from repro.analysis.hlo import xla_cost_analysis
 from repro.analysis.roofline import V5E, roofline_from_compiled
 from repro.configs import ARCHS, cells_for, get_config
 from repro.launch.mesh import make_production_mesh
@@ -52,7 +53,7 @@ def run_cell(arch: str, cell_name: str, *, multi_pod: bool = False,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = xla_cost_analysis(compiled)
     terms = roofline_from_compiled(compiled, hw=V5E, n_chips=n_chips,
                                    model_flops=spec.model_flops)
     arg_b = getattr(mem, "argument_size_in_bytes", 0)
@@ -81,7 +82,7 @@ def run_cell(arch: str, cell_name: str, *, multi_pod: bool = False,
         "roofline_fraction": ((spec.model_flops / n_chips) / terms.step_s)
         / V5E.peak_flops if terms.step_s else 0.0,
         "while_trips": terms.analysis.while_trips,
-        "xla_flops_per_dev": cost.get("flops") if cost else None,
+        "xla_flops_per_dev": cost.get("flops"),
     }
     if verbose:
         print(f"== {arch} × {cell_name} × {rec['mesh']} "
@@ -100,6 +101,39 @@ def run_cell(arch: str, cell_name: str, *, multi_pod: bool = False,
     return rec
 
 
+def plan_jobfile(path: str, *, n_workers: int = 4, cores: int = 1,
+                 strategy: str = "cost", verbose: bool = True) -> list:
+    """Placement dry-run for a paper-format job file (§3.3 grammar).
+
+    Parses the text, then runs the MasterScheduler segment by segment
+    *without executing anything* — a static preview of worker assignment,
+    co-scheduling, spawning, and (with ``strategy="cost"``) the cost-model
+    estimates.  No results exist yet, so locality terms are zero; what the
+    preview shows is the queue/co-schedule structure.
+    """
+    from repro.core import (MasterScheduler, ResultStore, VirtualCluster,
+                            parse_job_file)
+
+    graph = parse_job_file(path)
+    cluster = VirtualCluster(n_schedulers=1, cores_per_worker=cores,
+                             max_workers=n_workers)
+    master = MasterScheduler(graph, cluster, strategy=strategy)
+    store = ResultStore(cluster)
+    plans = []
+    for i, seg in enumerate(graph.segments):
+        placements = master.plan_segment(seg.jobs, store)
+        plans.append(placements)
+        if verbose:
+            print(f"S{i}:")
+            for p in placements:
+                co = (f" co={','.join(p.co_scheduled_with)}"
+                      if p.co_scheduled_with else "")
+                est = f" est={p.est_cost_s * 1e6:.1f}us" if strategy == "cost" else ""
+                print(f"  {p.job.name} -> worker {p.worker.wid} "
+                      f"(seq={p.n_sequences}){co}{est}")
+    return plans
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCHS))
@@ -108,7 +142,17 @@ def main(argv=None):
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--out", default="")
+    ap.add_argument("--jobfile", default="",
+                    help="placement dry-run of a paper-format job file "
+                         "instead of the arch x cell compile sweep")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--strategy", choices=["greedy", "cost"], default="cost")
     args = ap.parse_args(argv)
+
+    if args.jobfile:
+        plan_jobfile(args.jobfile, n_workers=args.workers,
+                     strategy=args.strategy)
+        return
 
     cells = []
     if args.all:

@@ -77,6 +77,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config unchanged")
+    ap.add_argument("--engine", choices=["fused", "hypar"], default="fused",
+                    help="fused = tailored SPMD step; hypar = the paper's "
+                         "job-graph runtime (BaseExecutor, DESIGN.md §2)")
+    ap.add_argument("--dispatch", choices=["sync", "pipelined", "dataflow"],
+                    default="sync", help="LocalExecutor dispatch mode "
+                                         "(hypar engine only)")
+    ap.add_argument("--placement", choices=["greedy", "cost"], default="greedy",
+                    help="master-scheduler placement strategy (hypar engine)")
     args = ap.parse_args(argv)
 
     base = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -84,8 +92,8 @@ def main(argv=None):
         base, layers=args.layers, d_model=args.d_model, seq=args.seq)
     n_dev = len(jax.devices())
     data_ax = args.data_axis or max(1, n_dev // args.model_axis)
-    mesh = jax.make_mesh((data_ax, args.model_axis), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((data_ax, args.model_axis), ("data", "model"))
     rules = ShardingRules(mesh=mesh, rules=dict(DEFAULT_RULES))
 
     spec = OptimizerSpec(kind=cfg.optimizer, lr=args.lr)
@@ -93,6 +101,9 @@ def main(argv=None):
                                       total=args.steps)
     dc = DataConfig(seed=args.seed, global_batch=args.batch, seq_len=args.seq)
     stream = SyntheticLMStream(cfg, dc)
+
+    if args.engine == "hypar":
+        return _run_hypar(cfg, spec, stream, args)
 
     with use_rules(mesh, rules.rules):
         step_fn = make_train_step(cfg, spec, grad_accum=args.grad_accum,
@@ -142,6 +153,34 @@ def main(argv=None):
         print(f"done: final loss {final_loss:.4f} "
               f"({tokens_done / (time.time() - t0):.0f} tok/s)")
         return final_loss
+
+
+def _run_hypar(cfg, spec, stream, args) -> float:
+    """Drive training through the paper's job-graph runtime.
+
+    Same BaseExecutor contract as every other consumer: the dispatch mode
+    and placement strategy are plain LocalExecutor knobs, nothing here
+    special-cases them.
+    """
+    from repro.train import HyParTrainer
+
+    n_micro = max(1, args.grad_accum)
+    mb = max(1, args.batch // n_micro)
+    batches = []
+    for s in range(args.steps):
+        b = stream.batch(s)
+        batches.append([{k: jnp.asarray(v[m * mb:(m + 1) * mb])
+                         for k, v in b.items()} for m in range(n_micro)])
+    trainer = HyParTrainer(cfg, spec, n_micro=n_micro,
+                           mode=args.dispatch, strategy=args.placement)
+    t0 = time.time()
+    params, _, report = trainer.run(batches, key=jax.random.PRNGKey(args.seed))
+    dt = time.time() - t0
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"hypar engine: {args.steps} steps x {n_micro} micro in {dt:.1f}s "
+          f"({args.steps * args.batch * args.seq / dt:.0f} tok/s) "
+          f"params={n_params / 1e6:.1f}M | {report.summary()}")
+    return dt
 
 
 def _lookup(sh_tree, key: str):

@@ -42,9 +42,11 @@ class HyParTrainer:
 
     def __init__(self, cfg: ModelConfig, spec: OptimizerSpec, *,
                  n_micro: int = 2, cluster: VirtualCluster | None = None,
-                 dynamic: bool = True):
+                 dynamic: bool = True, mode: str = "sync",
+                 strategy: str = "greedy"):
         self.cfg, self.spec, self.n_micro = cfg, spec, n_micro
         self.dynamic = dynamic
+        self.mode, self.strategy = mode, strategy
         self.cluster = cluster or VirtualCluster(n_schedulers=1)
         self.registry = FunctionRegistry()
         self._params_def = None
@@ -147,7 +149,8 @@ class HyParTrainer:
             p_ref, o_ref = self._one_step_segments(graph, s, params_ref=p_ref,
                                                    opt_ref=o_ref)
 
-        executor = LocalExecutor(self.cluster, self.registry)
+        executor = LocalExecutor(self.cluster, self.registry, mode=self.mode,
+                                 strategy=self.strategy)
         results, report = executor.run(graph)
         final_p = jax.tree_util.tree_unflatten(self._params_def,
                                                results[p_ref].arrays())

@@ -1,0 +1,214 @@
+"""Executor parity: every job-graph fixture must produce numerically
+identical results through LocalExecutor sync, pipelined and dataflow
+dispatch, and (for SPMD-compatible fixtures) through SpmdExecutor — the
+contract test for the BaseExecutor ABC (DESIGN.md §2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BaseExecutor, ChunkedData, ChunkRef, ExecutionReport,
+                        FunctionRegistry, Job, JobGraph, LocalExecutor,
+                        SpmdExecutor, VirtualCluster)
+
+LOCAL_MODES = ("sync", "pipelined", "dataflow")
+
+
+# ---------------------------------------------------------------------------
+# fixtures: factories returning (graph, registry); chunk counts divide evenly
+# so the SPMD stacked form is well defined
+# ---------------------------------------------------------------------------
+
+
+def fix_chunkwise_chain():
+    """Two chained chunkwise segments (8 equal chunks)."""
+    reg = FunctionRegistry()
+
+    @reg.chunkwise(1)
+    def scale(c):
+        return c * 2.0 + 1.0
+
+    @reg.chunkwise(2)
+    def shift(c):
+        return jnp.tanh(c) + 3.0
+
+    g = JobGraph()
+    g.add_segment([Job("J1", 1, 0)])
+    g.add_segment([Job("J2", 2, 0, (ChunkRef("J1"),))])
+    g.bind_input("J1", np.arange(32, dtype=np.float32).reshape(8, 4), n_chunks=8)
+    return g, reg
+
+
+def fix_chunkwise_reduce():
+    """Chunkwise map then whole-function reduction."""
+    reg = FunctionRegistry()
+
+    @reg.chunkwise(1)
+    def square(c):
+        return c * c
+
+    @reg.whole(2)
+    def total(cd):
+        return ChunkedData.from_arrays([sum(jnp.sum(a) for a in cd.arrays())])
+
+    g = JobGraph()
+    g.add_segment([Job("P", 1, 0, no_send_back=True)])
+    g.add_segment([Job("Q", 2, 1, (ChunkRef("P"),))])
+    g.bind_input("P", np.arange(16, dtype=np.float32).reshape(4, 4), n_chunks=4)
+    return g, reg
+
+
+def fix_sliced_refs():
+    """Consumers reading disjoint slices of one producer (paper R1[a..b])."""
+    reg = FunctionRegistry()
+
+    @reg.chunkwise(1)
+    def ident(c):
+        return c + 0.5
+
+    @reg.whole(2)
+    def total(cd):
+        return ChunkedData.from_arrays([sum(jnp.sum(a) for a in cd.arrays())])
+
+    g = JobGraph()
+    g.add_segment([Job("J1", 1, 0)])
+    g.add_segment([Job("LO", 2, 1, (ChunkRef("J1", 0, 3),)),
+                   Job("HI", 2, 1, (ChunkRef("J1", 3, 6),))])
+    g.bind_input("J1", np.arange(24, dtype=np.float32).reshape(6, 4), n_chunks=6)
+    return g, reg
+
+
+def fix_two_producers():
+    """Two chunkwise producers combined by a whole function."""
+    reg = FunctionRegistry()
+
+    @reg.chunkwise(1)
+    def double(c):
+        return c * 2.0
+
+    @reg.whole(2)
+    def combine(*cds):
+        vals = [a for cd in cds for a in cd.arrays()]
+        return ChunkedData.from_arrays([jnp.max(jnp.stack(vals))])
+
+    g = JobGraph()
+    g.add_segment([Job("J1", 1, 0), Job("J2", 1, 0)])
+    g.add_segment([Job("J3", 2, 1, (ChunkRef("J1"), ChunkRef("J2")))])
+    g.bind_input("J1", np.arange(8, dtype=np.float32).reshape(4, 2), n_chunks=4)
+    g.bind_input("J2", -np.arange(8, dtype=np.float32).reshape(4, 2), n_chunks=4)
+    return g, reg
+
+
+def fix_dynamic_control():
+    """Control job re-enqueueing until convergence (Jacobi pattern).
+    Local-only: SpmdExecutor fuses this shape via IterativeSpec instead."""
+    reg = FunctionRegistry()
+
+    @reg.chunkwise(1)
+    def halve(c):
+        return c / 2
+
+    state = {"last": "H0", "iters": 0}
+
+    @reg.control(9)
+    def check(cd, ctx):
+        v = float(np.max(np.abs(np.asarray(cd.get_data_chunk(0).data))))
+        if v > 1.0:
+            state["iters"] += 1
+            nxt = f"H{state['iters']}"
+            ctx.add_job(Job(nxt, 1, 0, (ChunkRef(state["last"]),)), 1)
+            ctx.add_job(Job(f"C{state['iters']}", 9, 1, (ChunkRef(nxt),)), 2)
+            state["last"] = nxt
+        return cd
+
+    g = JobGraph()
+    g.add_segment([Job("H0", 1, 0)])
+    g.add_segment([Job("C0", 9, 1, (ChunkRef("H0"),))])
+    g.bind_input("H0", np.array([[48.0, -64.0]]), n_chunks=1)
+    return g, reg
+
+
+SPMD_FIXTURES = {
+    "chunkwise-chain": fix_chunkwise_chain,
+    "chunkwise-reduce": fix_chunkwise_reduce,
+    "sliced-refs": fix_sliced_refs,
+    "two-producers": fix_two_producers,
+}
+ALL_FIXTURES = dict(SPMD_FIXTURES, **{"dynamic-control": fix_dynamic_control})
+
+
+def _normalize(val) -> np.ndarray:
+    """Executor-independent view of one job's result: flat concatenation of
+    its chunks (Local) / stacked rows (SPMD)."""
+    if isinstance(val, ChunkedData):
+        return np.concatenate([np.asarray(c.data).ravel() for c in val])
+    return np.asarray(val).ravel()
+
+
+def _run_local(factory, mode, strategy="greedy"):
+    g, reg = factory()
+    ex = LocalExecutor(VirtualCluster(n_schedulers=1, max_workers=4), reg,
+                      mode=mode, strategy=strategy)
+    assert isinstance(ex, BaseExecutor)
+    results, report = ex.run(g)
+    assert isinstance(report, ExecutionReport) and report.mode == mode
+    return {k: _normalize(v) for k, v in results.items()}
+
+
+# ---------------------------------------------------------------------------
+# the parity assertions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(ALL_FIXTURES))
+def test_local_mode_parity(name):
+    factory = ALL_FIXTURES[name]
+    base = _run_local(factory, "sync")
+    for mode in LOCAL_MODES[1:]:
+        other = _run_local(factory, mode)
+        assert set(other) == set(base), mode
+        for job in base:
+            np.testing.assert_array_equal(base[job], other[job],
+                                          err_msg=f"{name}/{mode}/{job}")
+
+
+@pytest.mark.parametrize("name", list(ALL_FIXTURES))
+def test_cost_strategy_parity(name):
+    """Placement strategy may move jobs; numerics must not change."""
+    factory = ALL_FIXTURES[name]
+    base = _run_local(factory, "sync")
+    other = _run_local(factory, "dataflow", strategy="cost")
+    for job in base:
+        np.testing.assert_array_equal(base[job], other[job],
+                                      err_msg=f"{name}/cost/{job}")
+
+
+@pytest.mark.parametrize("name", list(SPMD_FIXTURES))
+def test_spmd_parity(name):
+    factory = SPMD_FIXTURES[name]
+    base = _run_local(factory, "sync")
+    g, reg = factory()
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    ex = SpmdExecutor(mesh, reg)
+    assert isinstance(ex, BaseExecutor)
+    results, report = ex.run(g)
+    assert isinstance(report, ExecutionReport) and report.mode == "spmd"
+    assert set(results) == set(base)
+    for job in base:
+        np.testing.assert_allclose(_normalize(results[job]), base[job],
+                                   rtol=1e-6, err_msg=f"{name}/spmd/{job}")
+
+
+def test_reports_are_structurally_consistent():
+    """Every mode fills the report: one SegmentReport per segment, all jobs
+    accounted, byte accounting consistent with the unified summary()."""
+    for mode in LOCAL_MODES:
+        g, reg = fix_sliced_refs()
+        ex = LocalExecutor(VirtualCluster(n_schedulers=1, max_workers=4), reg,
+                           mode=mode)
+        _, report = ex.run(g)
+        assert len(report.segments) == len(g.segments)
+        named = sorted(j for s in report.segments for j in s.jobs)
+        assert named == sorted(g.names())
+        assert report.moved_bytes + report.local_bytes > 0
+        assert mode in report.summary()

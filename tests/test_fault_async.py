@@ -1,0 +1,165 @@
+"""Worker failure with the async dispatchers: lineage recovery must
+re-execute lost ``no_send_back`` results while jobs are in flight on the
+per-worker queues, and ``ExecutionReport.recovered_jobs`` accounting must
+stay correct (DESIGN.md §6)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ChaosLocalExecutor, ChunkedData, ChunkRef,
+                        FaultInjector, FunctionRegistry, Job, JobGraph,
+                        LocalExecutor, VirtualCluster)
+
+ASYNC_MODES = ("pipelined", "dataflow")
+
+
+def _square_sum_graph():
+    reg = FunctionRegistry()
+
+    @reg.chunkwise(1)
+    def produce(c):
+        return c * c
+
+    @reg.whole(2)
+    def consume(cd):
+        return ChunkedData.from_arrays([sum(jnp.sum(a) for a in cd.arrays())])
+
+    g = JobGraph()
+    g.add_segment([Job("P", 1, 0, no_send_back=True)])
+    g.add_segment([Job("Q", 2, 1, (ChunkRef("P"),))])
+    g.bind_input("P", np.arange(6, dtype=np.float32), n_chunks=3)
+    return g, reg
+
+
+@pytest.mark.parametrize("mode", ASYNC_MODES)
+def test_lost_no_send_back_recovered_mid_run(mode):
+    g, reg = _square_sum_graph()
+    inj = FaultInjector().kill_after_jobs(worker=0, n=1)
+    ex = ChaosLocalExecutor(VirtualCluster(n_schedulers=1, max_workers=3),
+                            reg, inj, mode=mode)
+    res, rep = ex.run(g)
+    assert rep.recovered_jobs == ["P"], rep.recovered_jobs
+    assert inj.killed == [0]
+    assert float(res["Q"].to_array()) == pytest.approx(
+        float((np.arange(6) ** 2).sum()))
+
+
+@pytest.mark.parametrize("mode", ASYNC_MODES)
+def test_sent_back_results_survive_async_worker_loss(mode):
+    """Default (sent-back) results live on the scheduler: a worker death
+    must not trigger any recovery in the async paths either."""
+    reg = FunctionRegistry()
+
+    @reg.chunkwise(1)
+    def f(c):
+        return c + 1
+
+    @reg.whole(2)
+    def total(cd):
+        return ChunkedData.from_arrays([sum(jnp.sum(a) for a in cd.arrays())])
+
+    g = JobGraph()
+    g.add_segment([Job("P", 1, 0)])          # send back (default)
+    g.add_segment([Job("Q", 2, 1, (ChunkRef("P"),))])
+    g.bind_input("P", np.zeros(4, np.float32), n_chunks=2)
+    inj = FaultInjector().kill_after_jobs(worker=0, n=1)
+    ex = ChaosLocalExecutor(VirtualCluster(n_schedulers=1, max_workers=2),
+                            reg, inj, mode=mode)
+    res, rep = ex.run(g)
+    assert rep.recovered_jobs == []
+    assert float(res["Q"].to_array()) == pytest.approx(4.0)
+
+
+@pytest.mark.parametrize("mode", ASYNC_MODES)
+def test_mid_segment_kill_multi_worker_chain(mode):
+    """Kill a worker between segments of a wide multi-segment chain: every
+    retained shard it held must be recovered exactly once and the final
+    reduction must be exact."""
+    width, depth = 3, 4
+    reg = FunctionRegistry()
+
+    @reg.chunkwise("inc")
+    def inc(c):
+        return c + 1.0
+
+    @reg.whole("sum")
+    def total(*cds):
+        return ChunkedData.from_arrays(
+            [sum(jnp.sum(a) for cd in cds for a in cd.arrays())])
+
+    g = JobGraph()
+    for k in range(depth):
+        jobs = []
+        for i in range(width):
+            deps = (ChunkRef(f"J{k - 1}_{i}"),) if k else ()
+            jobs.append(Job(f"J{k}_{i}", "inc", 1, deps, no_send_back=True))
+        g.add_segment(jobs)
+        if k == 0:
+            for i, j in enumerate(jobs):
+                g.bind_input(j.name, np.full(4, float(i), np.float32), n_chunks=2)
+    g.add_segment([Job("OUT", "sum", 1,
+                       tuple(ChunkRef(f"J{depth - 1}_{i}")
+                             for i in range(width)))])
+
+    inj = FaultInjector().kill_before_segment(worker=1, segment=2)
+    ex = ChaosLocalExecutor(VirtualCluster(n_schedulers=1, max_workers=width),
+                            reg, inj, mode=mode)
+    res, rep = ex.run(g)
+    # exact expected value: chunk i starts at i, +1 per segment
+    expected = sum(4 * (i + depth) for i in range(width))
+    assert float(res["OUT"].to_array()) == pytest.approx(expected)
+    assert inj.killed == [1]
+    # accounting: recovered jobs are real graph jobs, no duplicates
+    rec = rep.recovered_jobs
+    assert len(rec) == len(set(rec))
+    assert all(name in g.names() for name in rec)
+
+
+@pytest.mark.parametrize("mode", ASYNC_MODES)
+def test_recovery_is_recursive_through_lineage(mode):
+    """A lost result whose producer's own input was also lost re-executes
+    the full lineage (paper §3.1's recompute cost, recursively)."""
+    reg = FunctionRegistry()
+
+    @reg.chunkwise("a")
+    def a(c):
+        return c * 2
+
+    @reg.chunkwise("b")
+    def b(c):
+        return c + 10
+
+    @reg.whole("out")
+    def out(cd):
+        return ChunkedData.from_arrays([sum(jnp.sum(x) for x in cd.arrays())])
+
+    g = JobGraph()
+    g.add_segment([Job("A", "a", 1, no_send_back=True)])
+    g.add_segment([Job("B", "b", 1, (ChunkRef("A"),), no_send_back=True)])
+    g.add_segment([Job("OUT", "out", 1, (ChunkRef("B"),))])
+    g.bind_input("A", np.arange(4, dtype=np.float32), n_chunks=2)
+
+    # single worker holds both retained results; kill it before the last
+    # segment so BOTH must re-execute (A first, then B through lineage)
+    inj = FaultInjector().kill_before_segment(worker=0, segment=2)
+    ex = ChaosLocalExecutor(VirtualCluster(n_schedulers=1, max_workers=1),
+                            reg, inj, mode=mode)
+    res, rep = ex.run(g)
+    assert float(res["OUT"].to_array()) == pytest.approx(
+        float((np.arange(4) * 2 + 10).sum()))
+    assert sorted(set(rep.recovered_jobs)) == ["A", "B"]
+
+
+def test_async_report_matches_sync_recovery_accounting():
+    """Same fault plan, same graph: the async modes must report the same
+    recovered set as the sync baseline."""
+    recs = {}
+    for mode in ("sync",) + ASYNC_MODES:
+        g, reg = _square_sum_graph()
+        inj = FaultInjector().kill_after_jobs(worker=0, n=1)
+        ex = ChaosLocalExecutor(VirtualCluster(n_schedulers=1, max_workers=3),
+                                reg, inj, mode=mode)
+        _, rep = ex.run(g)
+        recs[mode] = sorted(rep.recovered_jobs)
+    assert recs["pipelined"] == recs["sync"]
+    assert recs["dataflow"] == recs["sync"]

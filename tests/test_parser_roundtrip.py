@@ -1,0 +1,133 @@
+"""Round-trip property tests for the paper §3.3 job-file grammar:
+``parse_job_text ∘ format_job_text`` is the identity on formatted text, for
+whole refs, sliced refs ``R1[0..5]``, ``no_send_back`` flags and symbolic
+function names — plus the malformed-input error paths."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (ChunkRef, GraphValidationError, Job, JobGraph,
+                        ParallelSegment, format_job_text, parse_job_text)
+
+
+def _roundtrip(graph: JobGraph) -> JobGraph:
+    text = format_job_text(graph)
+    parsed = parse_job_text(text)
+    assert format_job_text(parsed) == text
+    return parsed
+
+
+def _assert_graphs_equal(a: JobGraph, b: JobGraph) -> None:
+    assert len(a.segments) == len(b.segments)
+    for sa, sb in zip(a.segments, b.segments):
+        assert sa.names() == sb.names()
+        for ja, jb in zip(sa.jobs, sb.jobs):
+            assert (ja.fn, ja.n_threads, ja.inputs, ja.no_send_back) == \
+                   (jb.fn, jb.n_threads, jb.inputs, jb.no_send_back), ja.name
+
+
+# ---------------------------------------------------------------------------
+# parametrized round trips over the grammar's feature matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("graph", [
+    # minimal: one job, no inputs
+    JobGraph([ParallelSegment([Job("J1", 1, 0)])]),
+    # whole refs, several jobs per segment
+    JobGraph([ParallelSegment([Job("J1", 1, 0), Job("J2", 2, 1)]),
+              ParallelSegment([Job("J3", 3, 0,
+                                   (ChunkRef("J1"), ChunkRef("J2")))])]),
+    # sliced refs (paper's R1[0..5])
+    JobGraph([ParallelSegment([Job("J1", 1, 0)]),
+              ParallelSegment([Job("J2", 2, 2, (ChunkRef("J1", 0, 5),),
+                                   no_send_back=True),
+                               Job("J3", 2, 2, (ChunkRef("J1", 5, 10),),
+                                   no_send_back=True)])]),
+    # symbolic function names (extension) survive the trip
+    JobGraph([ParallelSegment([Job("A", "sweep", 4)]),
+              ParallelSegment([Job("B", "residual", 0, (ChunkRef("A"),))])]),
+], ids=["minimal", "whole-refs", "sliced-refs", "symbolic-fns"])
+def test_roundtrip_parametrized(graph):
+    _assert_graphs_equal(graph, _roundtrip(graph))
+
+
+def test_paper_sample_roundtrip_preserves_slices_and_flags():
+    text = """J1(1,0,0), J2(2,1,0);
+J3(2,2,R1[0..5],true), J4(2,2,R1[5..10],true), J5(3,0,R1 R2);
+J7(5,1, R2 R3 R4 R5);"""
+    g = parse_job_text(text)
+    g2 = _roundtrip(g)
+    j3 = g2.job("J3")
+    assert j3.no_send_back and j3.inputs == (ChunkRef("J1", 0, 5),)
+    assert not g2.job("J5").no_send_back
+    assert [r.job for r in g2.job("J7").inputs] == ["J2", "J3", "J4", "J5"]
+
+
+def test_comments_and_trailing_separators_are_tolerated():
+    g = parse_job_text("# header comment\nJ1(1,0,0);  # inline\nJ2(1,0,R1);;")
+    assert g.names() == ["J1", "J2"]
+    _assert_graphs_equal(g, _roundtrip(g))
+
+
+# ---------------------------------------------------------------------------
+# property: random DAGs with the full feature mix survive the trip
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.lists(st.tuples(
+    st.integers(1, 9),          # fn id
+    st.integers(0, 4),          # n_threads
+    st.booleans(),              # no_send_back
+    st.integers(0, 2),          # 0 = no ref, 1 = whole ref, 2 = sliced ref
+), min_size=1, max_size=4), min_size=1, max_size=5))
+@settings(max_examples=40, deadline=None)
+def test_roundtrip_random_graphs(spec):
+    segments, counter = [], 0
+    prev_names: list[str] = []
+    for seg in spec:
+        jobs = []
+        for fid, nt, nsb, ref_kind in seg:
+            counter += 1
+            if prev_names and ref_kind == 1:
+                deps = (ChunkRef(prev_names[counter % len(prev_names)]),)
+            elif prev_names and ref_kind == 2:
+                lo = counter % 3
+                deps = (ChunkRef(prev_names[counter % len(prev_names)],
+                                 lo, lo + 1 + counter % 4),)
+            else:
+                deps = ()
+            jobs.append(Job(f"J{counter}", fid, nt, deps, no_send_back=nsb))
+        segments.append(ParallelSegment(jobs))
+        prev_names = [j.name for j in jobs]
+    g = JobGraph(segments)
+    _assert_graphs_equal(g, _roundtrip(g))
+
+
+# ---------------------------------------------------------------------------
+# malformed input error paths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad", [
+    "J1(1,0",                    # unbalanced parens
+    "J1(1)",                     # too few args
+    "J1(1,0,0,true,extra)",      # too many args
+    "J1(1,0,R1[3..2x])",         # malformed slice
+    "J1(1,0,0,maybe)",           # bad no_send_back literal
+    "J1(1,0,Q1)",                # refs must start with R
+    "(1,0,0)",                   # missing job name
+], ids=["unbalanced", "few-args", "many-args", "bad-slice", "bad-flag",
+        "bad-ref", "no-name"])
+def test_malformed_inputs_rejected(bad):
+    with pytest.raises(GraphValidationError):
+        parse_job_text(bad + ";")
+
+
+def test_structural_errors_surface_through_parser():
+    # grammar-valid but graph-invalid: same-segment dependency
+    with pytest.raises(GraphValidationError):
+        parse_job_text("J1(1,0,0), J2(1,0,R1);")
+    # unknown producer
+    with pytest.raises(GraphValidationError):
+        parse_job_text("J1(1,0,R9);")

@@ -118,8 +118,8 @@ SUB = textwrap.dedent("""
         s_ref, m_ref = step0(s_ref, b)
 
     # 4x2 mesh (EP over model for 4 experts? model=2 divides 4: EP engaged)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((4, 2), ("data", "model"))
     rules = ShardingRules(mesh=mesh, rules=dict(DEFAULT_RULES))
     with use_rules(mesh, rules.rules):
         state_struct = jax.eval_shape(
@@ -159,14 +159,15 @@ SPMD_EXEC = textwrap.dedent("""
     def square(c):
         return c * c
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((8,), ("data",))
     g = JobGraph()
     g.add_segment([Job("J1", 1, 0), Job("J2", 1, 0)])
     g.bind_input("J1", np.arange(16, dtype=np.float32).reshape(16, 1), n_chunks=16)
     g.bind_input("J2", np.arange(8, dtype=np.float32).reshape(8, 1), n_chunks=8)
     ex = SpmdExecutor(mesh, reg, chunk_axes=("data",))
-    res = ex.run(g)
+    res, report = ex.run(g)
+    assert report.mode == "spmd" and len(report.segments) == 1
     np.testing.assert_allclose(np.asarray(res["J1"]).ravel(),
                                (np.arange(16) ** 2))
     # fused while_loop iteration

@@ -1,7 +1,18 @@
-"""Per-kernel microbenchmarks (CPU reference path timings + interpret-mode
-correctness cost).  On real TPU hardware the same harness times the Pallas
-path; numbers here calibrate the CPU oracle and catch perf regressions in
-the jnp reference implementations the dry-run lowers."""
+"""Per-kernel microbenchmarks + the autotune pass.
+
+Two row families, both in the stable BENCH schema
+``{name, backend, shape, dtype, median_s, bytes, flops, ...}``:
+
+* ``*_ref_*``   — jnp-oracle timings at benchmark shapes: the CPU perf
+  trajectory (regressions in the references the dry-run lowers).
+* ``*_tuned``   — the Pallas path timed through the autotuner
+  (``repro.kernels.tuning``): on TPU the real kernels at benchmark shapes
+  over the full candidate grids; elsewhere interpret mode at small shapes
+  (the same machinery, exercised end-to-end — selection quality on CPU is
+  a proxy, the *cache round-trip* is the contract).  Tuned entries land in
+  the persistent cache, so a second run reuses them without re-timing and
+  the ``ops.py`` wrappers + the scheduler cost model pick them up.
+"""
 from __future__ import annotations
 
 import time
@@ -9,58 +20,170 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.jacobi_sweep.ops import jacobi_sweep
+from repro.kernels.jacobi_sweep.ops import jacobi_sweep, jacobi_sweep_residual
 from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.runtime import on_tpu
 from repro.kernels.ssd_scan.ops import ssd_intra_chunk
 
 
 def _time(fn, *args, iters=5, **kw):
-    out = fn(*args, **kw)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    """Median seconds per call (first call excluded: compile) — the same
+    statistic Autotuner._time_call records, so `median_s` means the same
+    thing in every BENCH row family."""
+    jax.block_until_ready(fn(*args, **kw))
+    samples = []
     for _ in range(iters):
-        out = fn(*args, **kw)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return samples[len(samples) // 2]
 
 
-def run() -> list[tuple[str, float, str]]:
+def bench_row(name, shape, dtype, median_s, *, flops=0.0, nbytes=0.0,
+              **extra):
+    """The one constructor of the stable BENCH row schema (ROADMAP): every
+    suite's rows — kernels, jacobi, hypar — must come through here so a
+    field change cannot skew one suite's cross-PR comparison silently."""
+    r = {"name": name, "backend": jax.default_backend(), "shape": list(shape),
+         "dtype": str(dtype), "median_s": median_s, "bytes": nbytes,
+         "flops": flops}
+    r.update(extra)
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Reference-path timings (perf trajectory of the jnp oracles)
+# ---------------------------------------------------------------------------
+
+
+def ref_rows(smoke: bool = False) -> list[dict]:
     ks = jax.random.split(jax.random.PRNGKey(0), 8)
     rows = []
 
-    B, S, H, KV, D = 1, 1024, 8, 2, 64
+    B, S, H, KV, D = (1, 256, 4, 2, 32) if smoke else (1, 1024, 8, 2, 64)
     q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
     k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
     v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
-    us = _time(flash_attention, q, k, v, impl="ref")
+    s = _time(flash_attention, q, k, v, impl="ref")
     flops = 2 * 2 * B * H * S * S // 2 * D
-    rows.append(("flash_attention_ref_1k", us, f"{flops/us/1e3:.1f}GF/s"))
+    rows.append(bench_row("flash_attention_ref", (B, S, H, D), "float32", s,
+                     flops=flops, nbytes=4.0 * (q.size + k.size + v.size)))
 
-    BC, Hs, Q, P, N = 8, 8, 128, 64, 64
+    BC, Hs, Q, P, N = (2, 2, 32, 16, 16) if smoke else (8, 8, 128, 64, 64)
     xh = jax.random.normal(ks[3], (BC, Hs, Q, P))
     dt = jax.nn.softplus(jax.random.normal(ks[4], (BC, Hs, Q, 1)))
     a = -dt * 0.5
     Bm = jax.random.normal(ks[5], (BC, Q, N))
     Cm = jax.random.normal(ks[6], (BC, Q, N))
-    us = _time(ssd_intra_chunk, xh, dt, a, Bm, Cm, impl="ref")
-    rows.append(("ssd_intra_chunk_ref", us, f"Q={Q},P={P},N={N}"))
+    s = _time(ssd_intra_chunk, xh, dt, a, Bm, Cm, impl="ref")
+    rows.append(bench_row("ssd_intra_chunk_ref", (BC, Hs, Q, P, N), "float32", s,
+                     flops=2.0 * BC * Hs * Q * Q * (P + N),
+                     nbytes=4.0 * (xh.size + Bm.size + Cm.size)))
 
-    x = jax.random.normal(ks[0], (4096, 1024), jnp.float32)
-    g = jnp.ones((1024,))
-    us = _time(rmsnorm, x, g, impl="ref")
-    rows.append(("rmsnorm_ref_4kx1k", us,
-                 f"{x.size*4*2/us/1e3:.1f}GB/s"))
+    R, d = (256, 512) if smoke else (4096, 1024)
+    x = jax.random.normal(ks[0], (R, d), jnp.float32)
+    g = jnp.ones((d,))
+    s = _time(rmsnorm, x, g, impl="ref")
+    rows.append(bench_row("rmsnorm_ref", (R, d), "float32", s,
+                     flops=3.0 * x.size, nbytes=2.0 * x.size * 4))
 
-    n = 2048
+    n = 512 if smoke else 2048
     A = jax.random.normal(ks[1], (n, n)) / n + jnp.eye(n) * 3
     xx = jax.random.normal(ks[2], (n,))
     b = jax.random.normal(ks[3], (n,))
-    us = _time(jacobi_sweep, A, xx, b, jnp.diag(A), impl="ref")
-    rows.append(("jacobi_sweep_ref_2k", us, f"{2*n*n/us/1e3:.1f}GF/s"))
+    diag = jnp.diag(A)
+    s = _time(jacobi_sweep, A, xx, b, diag, impl="ref")
+    rows.append(bench_row("jacobi_sweep_ref", (n, n), "float32", s,
+                     flops=2.0 * n * n, nbytes=4.0 * n * n))
+    s = _time(jacobi_sweep_residual, A, xx, b, diag, impl="ref")
+    rows.append(bench_row("jacobi_sweep_residual_ref", (n, n), "float32", s,
+                     flops=2.0 * n * n, nbytes=4.0 * n * n))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Autotune pass (Pallas path; populates the persistent tuning cache)
+# ---------------------------------------------------------------------------
+
+
+def autotune_rows(smoke: bool = False) -> list[dict]:
+    tuner = tuning.get_tuner()
+    impl = "kernel" if on_tpu() else "interpret"
+    tpu = on_tpu()
+    ks = jax.random.split(jax.random.PRNGKey(1), 8)
+    rows = []
+
+    def tune(kernel, make_call, shape, cands, flops, nbytes):
+        hit = tuner.observed_s(kernel, shape, jnp.float32) is not None
+        entry = tuner.tune(kernel, make_call, shape=shape, dtype=jnp.float32,
+                           candidates=cands, flops=flops, bytes_moved=nbytes)
+        rows.append(bench_row(f"{kernel}_tuned", shape, "float32",
+                         entry["median_s"], flops=flops, nbytes=nbytes,
+                         config=entry["config"],
+                         cache="hit" if hit else "miss"))
+
+    # jacobi sweep (fused-residual path — the §4 hot loop)
+    n = 2048 if tpu else (128 if smoke else 256)
+    cands = (tuning.DEFAULT_CANDIDATES["jacobi_sweep"] if tpu else
+             [{"row_block": r, "col_block": c}
+              for r in (64, 128) for c in (64, 128)])
+    A = jax.random.normal(ks[0], (n, n)) / n + jnp.eye(n) * 3
+    x = jax.random.normal(ks[1], (n,))
+    b = jax.random.normal(ks[2], (n,))
+    d = jnp.diag(A)
+    tune("jacobi_sweep",
+         lambda cfg: (lambda: jacobi_sweep_residual(A, x, b, d, impl=impl,
+                                                    **cfg)),
+         (n, n), cands, 2.0 * n * n, 4.0 * n * n)
+
+    # rmsnorm
+    R, dd = (4096, 1024) if tpu else ((32, 128) if smoke else (64, 256))
+    cands = (tuning.DEFAULT_CANDIDATES["rmsnorm"] if tpu else
+             [{"row_block": r} for r in (8, 16, 32)])
+    xr = jax.random.normal(ks[3], (R, dd), jnp.float32)
+    g = jnp.ones((dd,))
+    tune("rmsnorm",
+         lambda cfg: (lambda: rmsnorm(xr, g, impl=impl, **cfg)),
+         (R, dd), cands, 3.0 * xr.size, 2.0 * xr.size * 4)
+
+    # flash attention
+    B, S, H, KV, D = (1, 2048, 8, 2, 64) if tpu else (1, 128, 2, 2, 32)
+    cands = (tuning.DEFAULT_CANDIDATES["flash_attention"] if tpu else
+             [{"q_block": qb, "kv_block": kb}
+              for qb in (64, 128) for kb in (64, 128)])
+    q = jax.random.normal(ks[4], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[5], (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(ks[6], (B, S, KV, D), jnp.float32)
+    fl = 2.0 * 2 * B * H * S * S // 2 * D
+    tune("flash_attention",
+         lambda cfg: (lambda: flash_attention(q, k, v, impl=impl, **cfg)),
+         (B, S, H, D), cands, fl, 4.0 * (q.size + k.size + v.size))
+
+    # ssd scan (no block params yet — timing feeds the cost-model bridge)
+    BC, Hs, Q, P, N = (8, 8, 128, 64, 64) if tpu else (2, 2, 32, 16, 16)
+    xh = jax.random.normal(ks[7], (BC, Hs, Q, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (BC, Hs, Q, 1)))
+    a = -dt * 0.5
+    Bm = jax.random.normal(ks[1], (BC, Q, N))
+    Cm = jax.random.normal(ks[2], (BC, Q, N))
+    tune("ssd_scan",
+         lambda cfg: (lambda: ssd_intra_chunk(xh, dt, a, Bm, Cm, impl=impl)),
+         (BC, Hs, Q, P, N), [{}], 2.0 * BC * Hs * Q * Q * (P + N),
+         4.0 * (xh.size + Bm.size + Cm.size))
+    return rows
+
+
+def run(smoke: bool = False, tune: bool = True) -> list[dict]:
+    rows = ref_rows(smoke=smoke)
+    if tune:
+        rows += autotune_rows(smoke=smoke)
     return rows
 
 
 if __name__ == "__main__":
-    for name, us, derived in run():
-        print(f"{name},{us:.1f},{derived}")
+    for r in run():
+        extra = f" config={r['config']} cache={r['cache']}" if "config" in r else ""
+        print(f"{r['name']},{r['median_s'] * 1e6:.1f}us{extra}")

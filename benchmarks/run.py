@@ -1,66 +1,124 @@
-"""Benchmark harness entry point — one benchmark per paper table/figure
-plus framework-level measurements.  Prints ``name,us_per_call,derived``
-CSV rows (plus the detailed per-benchmark output above them).
+"""Benchmark harness entry point — one CLI over every sub-benchmark.
 
-  jacobi_fig3      — the paper's only results figure (Fig. 3): framework vs
-                     tailored Jacobi at 3 sizes × 500 iterations (default
-                     sizes shrink for CI; pass ``--paper`` for 2709/4209/7209
-                     × 500 as in the paper).
-  hypar_lm         — the same framework-vs-tailored claim on the LM
-                     training workload (this framework's primary domain)
-  kernels          — per-kernel microbenchmarks
-  roofline         — summarises the dry-run roofline table if
-                     benchmarks/results/dryrun.jsonl exists (produced by
-                     ``python -m repro.launch.dryrun --all``)
+    python -m benchmarks.run [--suite kernels|jacobi|hypar|all]
+                             [--paper] [--smoke]
+
+Each suite writes a ``BENCH_<suite>.json`` file at the repo root with a
+stable schema (the perf trajectory the ROADMAP tracks)::
+
+    {"schema_version": 1,
+     "rows": [{"name": ..., "backend": ..., "shape": [...], "dtype": ...,
+               "median_s": ..., "bytes": ..., "flops": ..., ...}, ...]}
+
+Suites:
+
+  kernels — per-kernel reference timings + the autotune pass
+            (``kernel_bench``): populates the persistent tuning cache, so
+            a second run reuses tuned configs without re-timing (rows
+            carry ``cache: hit|miss``).  -> BENCH_kernels.json
+  jacobi  — the paper's Fig. 3 (framework vs tailored Jacobi, fused
+            single-matvec iterations; ``--paper`` for the full
+            2709/4209/7209 × 500 table).  -> BENCH_jacobi.json
+  hypar   — framework-vs-tailored on the LM training workload.
+            -> BENCH_hypar.json
+
+``--smoke`` shrinks every suite to CI-sized shapes (used by the
+benchmark-smoke CI step, which uploads the BENCH_*.json artifacts).
+With ``--suite all`` the dry-run roofline table
+(``benchmarks/results/dryrun.jsonl``, if present) is summarised as well.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
-import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCHEMA_VERSION = 1
 
 
-def main() -> None:
-    quick = "--paper" not in sys.argv
-    rows: list[tuple[str, float, str]] = []
+def _write(filename: str, rows: list[dict]) -> None:
+    path = os.path.join(REPO_ROOT, filename)
+    with open(path, "w") as f:
+        json.dump({"schema_version": SCHEMA_VERSION, "rows": rows}, f,
+                  indent=1)
+    print(f"-> wrote {path} ({len(rows)} rows)")
 
-    print("== jacobi_fig3 (paper Fig. 3) ==")
-    from . import jacobi_paper
-    jrows = jacobi_paper.main(quick=quick)
-    for r in jrows:
-        rows.append((f"jacobi_n{r['n']}_tailored", r["tailored_s"] * 1e6 / r["iters"],
-                     "us/iter"))
-        rows.append((f"jacobi_n{r['n']}_hypar", r["hypar_s"] * 1e6 / r["iters"],
-                     f"overhead={r['overhead_pct']:+.1f}%"))
-        rows.append((f"jacobi_n{r['n']}_spmdfused", r["spmd_s"] * 1e6 / r["iters"],
-                     f"overhead={r['spmd_overhead_pct']:+.1f}%"))
 
-    print("\n== hypar_lm (framework vs tailored, LM training) ==")
-    from . import hypar_overhead
-    h = hypar_overhead.run(steps=4 if quick else 10)
-    rows.append(("hypar_lm_tailored", h["tailored_s"] * 1e6, "total"))
-    rows.append(("hypar_lm_framework", h["hypar_s"] * 1e6,
-                 f"overhead={h['overhead_pct']:+.1f}%"))
-
-    print("\n== kernels ==")
+def suite_kernels(*, smoke: bool = False) -> list[dict]:
+    print("== kernels (ref timings + autotune) ==")
     from . import kernel_bench
-    for name, us, derived in kernel_bench.run():
-        rows.append((name, us, derived))
+    rows = kernel_bench.run(smoke=smoke)
+    for r in rows:
+        extra = (f"  config={r['config']} cache={r['cache']}"
+                 if "config" in r else "")
+        print(f"  {r['name']:>28}: {r['median_s'] * 1e6:10.1f} us{extra}")
+    _write("BENCH_kernels.json", rows)
+    return rows
 
-    results = os.path.join(os.path.dirname(__file__), "results", "dryrun.jsonl")
-    if os.path.exists(results):
-        print("\n== roofline (from dry-run) ==")
-        with open(results) as f:
-            recs = [json.loads(l) for l in f if l.strip()]
-        for r in recs:
-            key = f"roofline_{r['arch']}_{r['cell']}_{r['mesh']}"
-            step_ms = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e3
-            rows.append((key, step_ms * 1e3,
-                         f"dom={r['dominant']},frac={r['roofline_fraction']*100:.1f}%"))
 
-    print("\nname,us_per_call,derived")
-    for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
+def suite_jacobi(*, paper: bool = False, smoke: bool = False) -> list[dict]:
+    print("== jacobi_fig3 (paper Fig. 3, fused-residual sweeps) ==")
+    from . import jacobi_paper
+    if smoke:
+        jrows = jacobi_paper.run(sizes=(256,), iters=50)
+    else:
+        jrows = jacobi_paper.main(quick=not paper)
+    rows = jacobi_paper.bench_rows(jrows)
+    _write("BENCH_jacobi.json", rows)
+    return rows
+
+
+def suite_hypar(*, smoke: bool = False) -> list[dict]:
+    print("== hypar_lm (framework vs tailored, LM training) ==")
+    from . import hypar_overhead
+    from .kernel_bench import bench_row
+    h = hypar_overhead.run(steps=2 if smoke else 4)
+    rows = [bench_row(f"hypar_lm_{k}", (), "float32", h[f"{k}_s"],
+                      overhead_pct=h["overhead_pct"] if k == "hypar" else 0.0)
+            for k in ("tailored", "hypar")]
+    _write("BENCH_hypar.json", rows)
+    return rows
+
+
+def print_roofline() -> None:
+    """Summarise the dry-run roofline table if present (produced by
+    ``python -m repro.launch.dryrun --all``) — print-only, no BENCH file."""
+    results = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "results", "dryrun.jsonl")
+    if not os.path.exists(results):
+        return
+    print("== roofline (from dry-run) ==")
+    with open(results) as f:
+        recs = [json.loads(l) for l in f if l.strip()]
+    for r in recs:
+        step_ms = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e3
+        print(f"  roofline_{r['arch']}_{r['cell']}_{r['mesh']}: "
+              f"{step_ms:.1f} ms/step dom={r['dominant']} "
+              f"frac={r['roofline_fraction'] * 100:.1f}%")
+
+
+SUITES = {"kernels": suite_kernels, "jacobi": suite_jacobi,
+          "hypar": suite_hypar}
+
+
+def main(argv: list[str] | None = None) -> None:
+    p = argparse.ArgumentParser(prog="benchmarks.run", description=__doc__)
+    p.add_argument("--suite", choices=[*SUITES, "all"], default="all")
+    p.add_argument("--paper", action="store_true",
+                   help="full paper sizes (2709/4209/7209 x 500 iters)")
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized shapes for every suite")
+    args = p.parse_args(argv)
+
+    if args.suite in ("kernels", "all"):
+        suite_kernels(smoke=args.smoke)
+    if args.suite in ("jacobi", "all"):
+        suite_jacobi(paper=args.paper, smoke=args.smoke)
+    if args.suite in ("hypar", "all"):
+        suite_hypar(smoke=args.smoke)
+    if args.suite == "all":
+        print_roofline()
 
 
 if __name__ == "__main__":

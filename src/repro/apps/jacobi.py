@@ -12,6 +12,16 @@
    one on-device ``while_loop`` by the SpmdExecutor (framework
    expressiveness at tailored speed).
 
+All three variants use the **fused-residual sweep**: each iteration
+performs exactly ONE ``A``-matvec — the residual it convergence-tests is
+``‖b - A·x_{k-1}‖``, already resident in the sweep's accumulator, instead
+of a second matvec against the fresh iterate (the sweep jobs J1 emit the
+squared-residual partials alongside their x' rows and J2 only reduces
+them).  The tested residual is therefore lagged by one iteration — for a
+fixed-iteration run (the paper's setup, tol=0) the iterates are
+identical, and the exact final residual is recomputed once outside the
+timed loop for reporting.
+
 Paper's claim (Fig. 3): the framework stays within ~10 % (mean) of the
 tailored runtime at sizes 2709/4209/7209, 500 iterations.
 ``benchmarks/jacobi_paper.py`` reproduces that table.
@@ -28,7 +38,9 @@ import numpy as np
 from repro.core import (ChunkedData, ChunkRef, DataChunk, FunctionRegistry,
                         Job, JobGraph, LocalExecutor, IterativeSpec,
                         SpmdExecutor, VirtualCluster)
-from repro.kernels.jacobi_sweep.ops import jacobi_sweep
+from repro.kernels.jacobi_sweep.ops import jacobi_sweep_residual
+from repro.kernels.runtime import on_tpu
+from repro.kernels.tuning import calibrated_cost_params, get_tuner
 
 __all__ = ["make_system", "jacobi_tailored", "jacobi_hypar", "jacobi_spmd",
            "JacobiResult"]
@@ -63,9 +75,11 @@ def jacobi_tailored(A, b, *, iters: int = 500, tol: float = 0.0,
     diag = jnp.diag(A)
 
     def sweep(x):
+        """(x', ‖b - A·x‖) in ONE matvec (fused-residual sweep)."""
         if kernel:
-            return jacobi_sweep(A, x, b, diag)
-        return (b - A @ x + diag * x) / diag
+            return jacobi_sweep_residual(A, x, b, diag)
+        r = b - A @ x
+        return x + r / diag, jnp.linalg.norm(r)
 
     def cond(state):
         i, x, res = state
@@ -73,8 +87,7 @@ def jacobi_tailored(A, b, *, iters: int = 500, tol: float = 0.0,
 
     def body(state):
         i, x, _ = state
-        x2 = sweep(x)
-        res = jnp.linalg.norm(b - A @ x2)
+        x2, res = sweep(x)          # res is ‖b - A·x‖, lagged one iteration
         return i + 1, x2, res
 
     run = jax.jit(lambda x0: jax.lax.while_loop(
@@ -82,10 +95,11 @@ def jacobi_tailored(A, b, *, iters: int = 500, tol: float = 0.0,
     x0 = jnp.zeros_like(b)
     run(x0)[1].block_until_ready()          # compile outside the timing
     t0 = time.perf_counter()
-    i, x, res = run(x0)
+    i, x, _ = run(x0)
     x.block_until_ready()
     dt = time.perf_counter() - t0
-    return JacobiResult(np.asarray(x), int(i), float(res), dt)
+    res = float(jnp.linalg.norm(b - A @ x))   # exact, outside the timed loop
+    return JacobiResult(np.asarray(x), int(i), res, dt)
 
 
 # ---------------------------------------------------------------------------
@@ -104,8 +118,12 @@ def jacobi_hypar(A, b, *, iters: int = 500, tol: float = 0.0,
     d_c = ChunkedData.from_array(diag, n_chunks)
     bounds = np.cumsum([0] + [c.data.shape[0] for c in A_rows])
 
-    # J1: one sweep over a row chunk.  Row chunk i needs x[rows_i] for the
-    # diagonal correction; the row offset is closure-specialised per chunk.
+    # J1: one fused-residual sweep over a row chunk.  Row chunk i needs
+    # x[rows_i] for the diagonal correction; the row offset is
+    # closure-specialised per chunk.  Each sweep emits its x' rows AND the
+    # chunk's squared-residual partial Σ(b_i - A_i·x)² — the residual of
+    # the incoming iterate is free once A_i·x is computed, so J2 never
+    # pays a second matvec.
     # Whole-fn contract: args are ChunkedData — cds[0] is the bound static
     # data (A_i, b_i, d_i [, x0]), cds[1] (if present) is R_{X_{k-1}}.
     # The array work is jitted (the paper's users register *compiled*
@@ -114,26 +132,32 @@ def jacobi_hypar(A, b, *, iters: int = 500, tol: float = 0.0,
         @jax.jit
         def kernel(A_chunk, b_chunk, d_chunk, x_full):
             xi = jax.lax.dynamic_slice(x_full, (lo,), (hi - lo,))
-            return (b_chunk - A_chunk @ x_full + d_chunk * xi) / d_chunk
+            r = b_chunk - A_chunk @ x_full        # incl. the diagonal term
+            return xi + r / d_chunk, jnp.sum(r * r)
 
         def sweep(*cds):
             st = cds[0]
             x_full = (cds[1].get_data_chunk(0).data if len(cds) > 1
                       else st.get_data_chunk(3).data)
-            return kernel(st.get_data_chunk(0).data, st.get_data_chunk(1).data,
-                          st.get_data_chunk(2).data, x_full)
+            x2, rsq = kernel(st.get_data_chunk(0).data,
+                             st.get_data_chunk(1).data,
+                             st.get_data_chunk(2).data, x_full)
+            return ChunkedData.from_arrays([x2, rsq])
         return sweep
 
     state = {"iter": 0}
 
     @jax.jit
-    def _residual_kernel(*xs):
-        x_new = jnp.concatenate(xs)
-        return x_new, jnp.linalg.norm(b - A @ x_new)
+    def _residual_kernel(xs, rsqs):
+        # reduce the sweeps' partials: no matvec here — the residual is the
+        # lagged ‖b - A·x_{k-1}‖ the sweeps computed for free
+        return jnp.concatenate(xs), jnp.sqrt(jnp.sum(jnp.stack(rsqs)))
 
     def residual_fn(*cds):
-        # one ChunkedData per sweep job; chunk 0 of each = x' rows
-        x_new, res = _residual_kernel(*[cd.get_data_chunk(0).data for cd in cds])
+        # one ChunkedData per sweep job; chunk 0 = x' rows, chunk 1 = Σr²
+        x_new, res = _residual_kernel(
+            [cd.get_data_chunk(0).data for cd in cds],
+            [cd.get_data_chunk(1).data for cd in cds])
         return ChunkedData.from_arrays([x_new, res])
 
     reg.register("residual", residual_fn, kind="whole")
@@ -159,7 +183,9 @@ def jacobi_hypar(A, b, *, iters: int = 500, tol: float = 0.0,
         for i in range(n_chunks):
             name = f"S{k}_{i}"
             inputs = (ChunkRef(x_ref),) if x_ref else ()
-            jobs.append(Job(name, f"sweep{i}", 0, inputs, no_send_back=True))
+            rows = float(bounds[i + 1] - bounds[i])
+            jobs.append(Job(name, f"sweep{i}", 0, inputs, no_send_back=True,
+                            cost_hint=2.0 * rows * n))
         return jobs
 
     def _enqueue_iteration(ctx):
@@ -169,7 +195,8 @@ def jacobi_hypar(A, b, *, iters: int = 500, tol: float = 0.0,
         for j in jobs:
             ctx.add_job(j, 1)
         ctx.add_job(Job(f"X{k}", "residual", 1,
-                        tuple(ChunkRef(j.name) for j in jobs)), 2)
+                        tuple(ChunkRef(j.name) for j in jobs),
+                        cost_hint=float(n)), 2)
         ctx.add_job(Job(f"C{k}", "check", 1, (ChunkRef(f"X{k}"),)), 3)
 
     # initial iteration 0 (bound inputs: A/b/diag per chunk + x0)
@@ -180,11 +207,32 @@ def jacobi_hypar(A, b, *, iters: int = 500, tol: float = 0.0,
             A_rows.get_data_chunk(i), b_c.get_data_chunk(i),
             d_c.get_data_chunk(i), xc.get_data_chunk(0)]))
     graph.add_segment([Job("X0", "residual", 1,
-                           tuple(ChunkRef(j.name) for j in jobs0))])
+                           tuple(ChunkRef(j.name) for j in jobs0),
+                           cost_hint=float(n))])
     graph.add_segment([Job("C0", "check", 1, (ChunkRef("X0"),))])
 
+    # tuned timings -> scheduler: seed the master's per-function time table
+    # from the autotune cache (full-sweep time scaled by the chunk's row
+    # share) and calibrate the cost model with observed kernel rates, so
+    # strategy="cost" prices jobs with measurements instead of roofline
+    # guesses (DESIGN.md §7).  Only on TPU: there the cache holds real
+    # kernel timings; off-TPU it holds interpret-mode proxies, orders of
+    # magnitude slower than the jitted jnp kernels these jobs execute.
+    observed = {}
+    if on_tpu():
+        t_full = get_tuner().observed_s("jacobi_sweep", (n, n), b.dtype,
+                                        nearest=True)
+        if t_full is not None and t_full > 0:
+            for i in range(n_chunks):
+                rows = float(bounds[i + 1] - bounds[i])
+                observed[f"sweep{i}"] = t_full * rows / n
+    cost_params = (calibrated_cost_params() if strategy == "cost" and on_tpu()
+                   else None)
+
     cluster = cluster or VirtualCluster(n_schedulers=1, max_workers=n_chunks)
-    ex = LocalExecutor(cluster, reg, mode=mode, strategy=strategy)
+    ex = LocalExecutor(cluster, reg, mode=mode, strategy=strategy,
+                       cost_params=cost_params,
+                       observed_fn_times=observed or None)
 
     # warm the jitted user kernels (compile outside the timed region, as for
     # the tailored baseline)
@@ -196,7 +244,9 @@ def jacobi_hypar(A, b, *, iters: int = 500, tol: float = 0.0,
                                         b_c.get_data_chunk(i),
                                         d_c.get_data_chunk(i),
                                         DataChunk(x_w)])))
-    _residual_kernel(*parts)[1].block_until_ready()
+    _residual_kernel([p.get_data_chunk(0).data for p in parts],
+                     [p.get_data_chunk(1).data for p in parts]
+                     )[1].block_until_ready()
 
     # bind per-chunk static inputs for dynamically added sweep jobs as they
     # appear: the executor reads bound_inputs at dispatch; pre-bind for all
@@ -217,7 +267,7 @@ def jacobi_hypar(A, b, *, iters: int = 500, tol: float = 0.0,
     dt = time.perf_counter() - t0
     k = state["iter"]
     x = np.asarray(results[f"X{k}"].get_data_chunk(0).data)
-    res = float(np.asarray(results[f"X{k}"].get_data_chunk(1).data))
+    res = float(jnp.linalg.norm(b - A @ jnp.asarray(x)))  # exact, untimed
     return JacobiResult(x, k + 1, res, dt,
                         extra={"report": report.summary(), "mode": mode,
                                "moved_bytes": report.moved_bytes})
@@ -234,11 +284,11 @@ def jacobi_spmd(A, b, *, iters: int = 500, tol: float = 0.0,
 
     def body(carry):
         x, _ = carry
-        x2 = (b - A @ x + diag * x) / diag
-        return x2, jnp.linalg.norm(b - A @ x2)
+        r = b - A @ x                 # the iteration's ONLY matvec
+        return x + r / diag, jnp.linalg.norm(r)
 
     def cond(carry):
-        return carry[1] > tol
+        return carry[1] > tol         # lagged residual ‖b - A·x_{k-1}‖
 
     if mesh is None:
         mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
@@ -248,7 +298,8 @@ def jacobi_spmd(A, b, *, iters: int = 500, tol: float = 0.0,
     # warmup/compile
     ex.run_iterative(spec, x0)
     t0 = time.perf_counter()
-    (x, res), n_it = ex.run_iterative(spec, x0)
+    (x, _), n_it = ex.run_iterative(spec, x0)
     x.block_until_ready()
     dt = time.perf_counter() - t0
-    return JacobiResult(np.asarray(x), n_it, float(res), dt)
+    res = float(jnp.linalg.norm(b - A @ x))   # exact, outside the timed loop
+    return JacobiResult(np.asarray(x), n_it, res, dt)

@@ -142,7 +142,8 @@ class LocalExecutor(BaseExecutor):
                  block_per_job: bool = False,
                  mode: str = "sync",
                  strategy: str = "greedy",
-                 cost_params: CostModelParams | None = None):
+                 cost_params: CostModelParams | None = None,
+                 observed_fn_times: dict[Any, float] | None = None):
         if mode not in MODES:
             raise ValueError(f"unknown dispatch mode {mode!r}; pick from {MODES}")
         self.cluster = cluster
@@ -157,6 +158,9 @@ class LocalExecutor(BaseExecutor):
         self.mode = mode
         self.strategy = strategy
         self.cost_params = cost_params
+        # per-function wall-time seed for the master's queue-term EWMA
+        # (e.g. tuned kernel timings, repro.kernels.tuning)
+        self.observed_fn_times = observed_fn_times
         self._jit_cache: dict[Any, Callable] = {}
         # serialises store/report/graph mutation when worker queues dispatch
         # from threads; reentrant because lineage recovery recurses into
@@ -333,7 +337,8 @@ class LocalExecutor(BaseExecutor):
         report = ExecutionReport(mode=self.mode)
         self._master = MasterScheduler(graph, self.cluster,
                                        strategy=self.strategy,
-                                       cost_params=self.cost_params)
+                                       cost_params=self.cost_params,
+                                       observed_fn_times=self.observed_fn_times)
         try:
             if self.mode == "sync":
                 self._run_sync(graph, report, release_consumed)
@@ -358,7 +363,7 @@ class LocalExecutor(BaseExecutor):
             sreport = SegmentReport(index=seg_idx, jobs=list(segment.names()))
             t0 = time.perf_counter()
             worker_time: dict[int, float] = {}
-            n_dynamic_before = sum(len(s) for s in graph.segments)
+            n_dynamic_before = graph.n_jobs()
             executed: set[str] = set()
             # fixpoint over same-segment dynamic additions: control jobs may
             # add to the *current* segment, which needs a re-plan pass
@@ -375,7 +380,7 @@ class LocalExecutor(BaseExecutor):
                         + elapsed * worker.slowdown
                     executed.add(p.job.name)
                 pending = [j for j in segment.jobs if j.name not in executed]
-            n_dynamic_after = sum(len(s) for s in graph.segments)
+            n_dynamic_after = graph.n_jobs()
             report.dynamic_jobs_added += max(0, n_dynamic_after - n_dynamic_before)
             if not self.block_per_job:
                 self._segment_barrier(executed)
@@ -397,7 +402,7 @@ class LocalExecutor(BaseExecutor):
             sreport = SegmentReport(index=seg_idx, jobs=list(segment.names()))
             t0 = time.perf_counter()
             worker_time: dict[int, float] = {}
-            n_dynamic_before = sum(len(s) for s in graph.segments)
+            n_dynamic_before = graph.n_jobs()
             executed: set[str] = set()
             pending = list(segment.jobs)
             while pending:
@@ -426,7 +431,7 @@ class LocalExecutor(BaseExecutor):
                     worker_time[worker.wid] = worker_time.get(worker.wid, 0.0) \
                         + elapsed * worker.slowdown
                 pending = [j for j in segment.jobs if j.name not in executed]
-            n_dynamic_after = sum(len(s) for s in graph.segments)
+            n_dynamic_after = graph.n_jobs()
             report.dynamic_jobs_added += max(0, n_dynamic_after - n_dynamic_before)
             self._segment_barrier(executed)
             sreport.jobs = list(segment.names())
@@ -644,7 +649,7 @@ class SpmdExecutor(BaseExecutor):
         for seg_idx, segment in enumerate(graph.segments):
             sreport = SegmentReport(index=seg_idx, jobs=list(segment.names()))
             t0 = time.perf_counter()
-            n_dynamic_before = sum(len(s) for s in graph.segments)
+            n_dynamic_before = graph.n_jobs()
             # group same-function chunkwise jobs (worker co-scheduling,
             # generalised: ONE sharded call executes the whole group)
             groups: dict[Any, list[Job]] = {}
@@ -688,7 +693,7 @@ class SpmdExecutor(BaseExecutor):
                 else:  # pragma: no cover
                     raise GraphValidationError(f"unsupported kind {rf.kind}")
             report.dynamic_jobs_added += max(
-                0, sum(len(s) for s in graph.segments) - n_dynamic_before)
+                0, graph.n_jobs() - n_dynamic_before)
             sreport.jobs = list(segment.names())
             sreport.wall_time = time.perf_counter() - t0
             report.segments.append(sreport)

@@ -66,10 +66,12 @@ class DataChunk:
             self.dtype = arr.dtype
         if self.n_elem < 0:
             self.n_elem = int(arr.size)
+        # cached: queried per placement candidate on the dispatch hot path
+        self._nbytes = int(np.dtype(self.dtype).itemsize) * self.n_elem
 
     @property
     def nbytes(self) -> int:
-        return int(np.dtype(self.dtype).itemsize) * self.n_elem
+        return self._nbytes
 
 
 class ChunkedData:
@@ -128,7 +130,10 @@ class ChunkedData:
 
     @classmethod
     def from_arrays(cls, arrs: Iterable[Any]) -> "ChunkedData":
-        return cls([DataChunk(jnp.asarray(a)) for a in arrs])
+        # skip the jnp.asarray dispatch for arrays already on device — this
+        # sits on the executor's per-job hot path
+        return cls([DataChunk(a if isinstance(a, jax.Array)
+                              else jnp.asarray(a)) for a in arrs])
 
     def to_array(self):
         """Concatenate all chunks along the leading axis."""
@@ -307,6 +312,11 @@ class JobGraph:
 
     def names(self) -> list[str]:
         return [j.name for j in self.jobs()]
+
+    def n_jobs(self) -> int:
+        """O(1) total job count (the executor polls this per segment;
+        scanning every segment would be O(segments²) over a run)."""
+        return len(self._by_name)
 
     def segment_of(self, name: str) -> int:
         return self._by_name[name].segment

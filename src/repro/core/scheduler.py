@@ -266,15 +266,20 @@ class MasterScheduler:
 
     def __init__(self, graph: JobGraph, cluster: VirtualCluster, *,
                  strategy: str = "greedy",
-                 cost_params: CostModelParams | None = None):
+                 cost_params: CostModelParams | None = None,
+                 observed_fn_times: Mapping[Any, float] | None = None):
         if strategy not in ("greedy", "cost"):
             raise ValueError(f"unknown placement strategy {strategy!r}")
         self.graph = graph
         self.cluster = cluster
         self.strategy = strategy
         self.cost_params = cost_params or CostModelParams()
-        # EWMA of observed wall time per function id (cost-model queue term)
-        self._fn_time: dict[Any, float] = {}
+        # EWMA of observed wall time per function id (cost-model queue term).
+        # Seeded from prior measurements when available (e.g. the kernel
+        # autotune cache, repro.kernels.tuning) so the very first placement
+        # round already prices queueing with observed rather than guessed
+        # times; runtime observations keep refining it.
+        self._fn_time: dict[Any, float] = dict(observed_fn_times or {})
 
     # -- runtime feedback (executor -> master) ---------------------------------
     def observe(self, fid, elapsed_s: float, alpha: float = 0.3) -> None:

@@ -1,17 +1,99 @@
-"""jit'd wrapper for the Jacobi sweep."""
+"""Public wrappers for the Jacobi sweep kernels.
+
+Dispatch (``repro.kernels.runtime.resolve_impl``): Pallas kernel on TPU,
+interpret mode elsewhere, jnp oracle on ``impl="ref"``.  Block sizes left
+unset are consulted from the autotune cache (``repro.kernels.tuning``) —
+a cache-only lookup, safe at jit trace time.  Non-divisible N is handled
+by zero-padding the system up to the block lcm (pad rows of A are zero,
+pad diag is one, so padded lanes contribute exactly zero to both x' and
+the fused residual) and slicing the result back.
+"""
 import functools
+import math
+
 import jax
+import jax.numpy as jnp
 
-from .kernel import jacobi_sweep_kernel
-from .ref import jacobi_sweep_ref
+from ..runtime import resolve_impl
+from ..tuning import get_tuner
+from .kernel import jacobi_sweep_kernel, jacobi_sweep_residual_kernel
+from .ref import jacobi_sweep_ref, jacobi_sweep_residual_ref
+
+DEFAULT_BLOCK = 256
+
+_ref = jax.jit(jacobi_sweep_ref)
+_residual_ref = jax.jit(jacobi_sweep_residual_ref)
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "row_block", "col_block"))
-def jacobi_sweep(A, x, b, diag, *, impl="auto", row_block=256, col_block=256):
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
-    if impl == "ref" or A.shape[0] % min(row_block, A.shape[0]):
-        return jacobi_sweep_ref(A, x, b, diag)
-    return jacobi_sweep_kernel(A, x, b, diag, row_block=row_block,
-                               col_block=col_block,
-                               interpret=(impl == "interpret"))
+def _tuned_blocks(N: int, dtype, row_block, col_block):
+    if row_block is None or col_block is None:
+        cfg = get_tuner().lookup("jacobi_sweep", (N, N), dtype) or {}
+        row_block = row_block or cfg.get("row_block", DEFAULT_BLOCK)
+        col_block = col_block or cfg.get("col_block", DEFAULT_BLOCK)
+    return row_block, col_block
+
+
+def _padded_system(A, x, b, diag, rb: int, cb: int):
+    # pad up to a multiple of lcm(rb, cb) computed from the UNCLAMPED block
+    # sizes: clamping first can turn a power-of-two block into a value
+    # coprime with the other block (e.g. N=300, blocks 512/256 -> clamped
+    # rb=300, lcm(300, 256)=19200), exploding the pad.  With power-of-two
+    # blocks the lcm is just max(rb, cb), so N=300 pads to 512.
+    N = A.shape[0]
+    pad = -N % math.lcm(rb, cb)
+    if pad:
+        A = jnp.pad(A, ((0, pad), (0, pad)))
+        x = jnp.pad(x, (0, pad))
+        b = jnp.pad(b, (0, pad))
+        diag = jnp.pad(diag, (0, pad), constant_values=1.0)
+    return A, x, b, diag
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("row_block", "col_block", "interpret"))
+def _sweep_call(A, x, b, diag, *, row_block, col_block, interpret):
+    N = A.shape[0]
+    Ap, xp, bp, dp = _padded_system(A, x, b, diag, row_block, col_block)
+    out = jacobi_sweep_kernel(Ap, xp, bp, dp, row_block=row_block,
+                              col_block=col_block, interpret=interpret)
+    return out[:N]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("row_block", "col_block", "interpret"))
+def _residual_call(A, x, b, diag, *, row_block, col_block, interpret):
+    N = A.shape[0]
+    Ap, xp, bp, dp = _padded_system(A, x, b, diag, row_block, col_block)
+    out, partials = jacobi_sweep_residual_kernel(
+        Ap, xp, bp, dp, row_block=row_block, col_block=col_block,
+        interpret=interpret)
+    return out[:N], jnp.sum(partials)
+
+
+def jacobi_sweep(A, x, b, diag, *, impl="auto", row_block=None,
+                 col_block=None):
+    """One Jacobi sweep: A (N, N); x, b, diag (N,) -> x' (N,)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return _ref(A, x, b, diag)
+    rb, cb = _tuned_blocks(A.shape[0], x.dtype, row_block, col_block)
+    return _sweep_call(A, x, b, diag, row_block=rb, col_block=cb,
+                       interpret=(impl == "interpret"))
+
+
+def jacobi_sweep_residual(A, x, b, diag, *, impl="auto", row_block=None,
+                          col_block=None):
+    """Fused sweep: returns ``(x', ‖b - A·x‖)`` with ONE A-matvec.
+
+    The returned norm is the residual of the *incoming* iterate ``x`` (the
+    accumulator already holds A·x when x' is formed, so it is free); a
+    convergence loop tests it lagged by one iteration.
+    """
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        x2, rsq = _residual_ref(A, x, b, diag)
+    else:
+        rb, cb = _tuned_blocks(A.shape[0], x.dtype, row_block, col_block)
+        x2, rsq = _residual_call(A, x, b, diag, row_block=rb, col_block=cb,
+                                 interpret=(impl == "interpret"))
+    return x2, jnp.sqrt(rsq)

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the Jacobi sweep kernel."""
+"""Pure-jnp oracles for the Jacobi sweep kernels."""
 import jax.numpy as jnp
 
 
@@ -8,3 +8,17 @@ def jacobi_sweep_ref(A, x, b, diag):
     t = Af @ xf
     return ((b.astype(jnp.float32) - t + diag.astype(jnp.float32) * xf)
             / diag.astype(jnp.float32)).astype(x.dtype)
+
+
+def jacobi_sweep_residual_ref(A, x, b, diag):
+    """Fused oracle: ``(x', ‖b - A·x‖²)`` with a single matvec.
+
+    The residual is that of the *incoming* iterate (same contract as the
+    fused kernel: convergence loops test it lagged by one iteration).
+    """
+    Af = A.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    df = diag.astype(jnp.float32)
+    r = b.astype(jnp.float32) - Af @ xf
+    x2 = (xf + r / df).astype(x.dtype)
+    return x2, jnp.sum(r * r)

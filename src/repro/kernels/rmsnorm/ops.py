@@ -1,24 +1,49 @@
-"""jit'd wrapper: fused RMSNorm on arbitrary-rank inputs."""
+"""Fused RMSNorm wrapper: platform dispatch + autotuned row blocking."""
 import functools
 import jax
 import jax.numpy as jnp
 
+from ..runtime import resolve_impl
+from ..tuning import get_tuner
 from .kernel import rmsnorm_kernel
 from .ref import rmsnorm_ref
 
+DEFAULT_ROW_BLOCK = 256
 
-@functools.partial(jax.jit, static_argnames=("eps", "impl"))
-def rmsnorm(x, gain, *, eps=1e-6, impl="auto"):
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def _ref_call(x2d, gain, *, eps):
+    return rmsnorm_ref(x2d, gain, eps=eps)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "row_block", "interpret"))
+def _kernel_call(x2d, gain, *, eps, row_block, interpret):
+    # zero-pad ragged row counts up to the sublane multiple: padded rows
+    # normalise to zero and are sliced off, so the kernel path serves every
+    # shape instead of silently falling back to the oracle
+    R = x2d.shape[0]
+    pad = -R % 8
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+    Rp = R + pad
+    rb = min(row_block, Rp)
+    while Rp % rb:
+        rb //= 2
+    out = rmsnorm_kernel(x2d, gain, eps=eps, row_block=rb,
+                         interpret=interpret)
+    return out[:R]
+
+
+def rmsnorm(x, gain, *, eps=1e-6, impl="auto", row_block=None):
     shape = x.shape
     x2d = x.reshape(-1, shape[-1])
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
-    if impl == "ref" or x2d.shape[0] % 8:
-        out = rmsnorm_ref(x2d, gain, eps=eps)
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        out = _ref_call(x2d, gain, eps=eps)
     else:
-        rb = 256
-        while x2d.shape[0] % rb:
-            rb //= 2
-        out = rmsnorm_kernel(x2d, gain, eps=eps, row_block=rb,
-                             interpret=(impl == "interpret"))
+        if row_block is None:
+            cfg = get_tuner().lookup("rmsnorm", x2d.shape, x.dtype) or {}
+            row_block = cfg.get("row_block", DEFAULT_ROW_BLOCK)
+        out = _kernel_call(x2d, gain, eps=eps, row_block=row_block,
+                           interpret=(impl == "interpret"))
     return out.reshape(shape)

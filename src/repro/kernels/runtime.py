@@ -1,0 +1,32 @@
+"""Shared platform/dispatch helpers for the kernel packages.
+
+Every ``ops.py`` wrapper resolves ``impl="auto"`` through
+:func:`resolve_impl`: the Pallas kernel on TPU, **interpret mode**
+everywhere else.  Interpret mode runs the real kernel logic (BlockSpecs,
+grid, accumulators) through the Pallas interpreter, so CPU CI exercises
+the kernels instead of silently falling back to the jnp references — a
+CPU-only bug in a BlockSpec now fails a test rather than hiding until the
+first TPU run.  The jnp oracles remain reachable with ``impl="ref"`` (and
+stay the default for the hot CPU *benchmark* paths, which opt in
+explicitly, since interpret mode is orders of magnitude slower).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["on_tpu", "resolve_impl"]
+
+IMPLS = ("auto", "kernel", "interpret", "ref")
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_impl(impl: str) -> str:
+    """Map ``auto`` to the concrete impl for the current backend."""
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; pick from {IMPLS}")
+    if impl != "auto":
+        return impl
+    return "kernel" if on_tpu() else "interpret"

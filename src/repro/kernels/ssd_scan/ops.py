@@ -1,17 +1,16 @@
 """jit'd wrapper with platform dispatch for the SSD intra-chunk kernel."""
-import functools
 import jax
-import jax.numpy as jnp
 
+from ..runtime import resolve_impl
 from .kernel import ssd_intra_chunk_kernel
 from .ref import ssd_intra_chunk_ref
 
+_ref = jax.jit(ssd_intra_chunk_ref)
 
-@functools.partial(jax.jit, static_argnames=("impl",))
+
 def ssd_intra_chunk(xh, dt, a, Bm, Cm, *, impl="auto"):
-    if impl == "auto":
-        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    impl = resolve_impl(impl)
     if impl == "ref":
-        return ssd_intra_chunk_ref(xh, dt, a, Bm, Cm)
+        return _ref(xh, dt, a, Bm, Cm)
     return ssd_intra_chunk_kernel(xh, dt, a, Bm, Cm,
                                   interpret=(impl == "interpret"))

@@ -19,6 +19,15 @@ _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
 
+# Hermetic kernel-autotune cache: the suite must neither read a
+# previously-tuned user-level cache (tuned block sizes would change which
+# kernel configs the wrappers pick) nor write test entries into it.
+# Individual tests override this with monkeypatch/tmp_path as needed.
+if "REPRO_TUNE_CACHE" not in os.environ:
+    import tempfile
+    os.environ["REPRO_TUNE_CACHE"] = os.path.join(
+        tempfile.mkdtemp(prefix="repro-tune-test-"), "kernel_tune.json")
+
 try:
     import hypothesis  # noqa: F401  (real library available — shim not needed)
 except ImportError:

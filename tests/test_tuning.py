@@ -1,0 +1,214 @@
+"""Autotuner subsystem: cache hit/miss, corrupt-cache recovery, selection
+determinism under a seeded timer stub, and the cost-model bridge."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import tuning
+from repro.kernels.tuning import (Autotuner, TuningCache, cache_key,
+                                  calibrated_cost_params, shape_bucket)
+
+
+class SeededTimer:
+    """perf_counter stub: each call advances the clock by a seeded
+    pseudo-random amount, so measured intervals — and therefore the
+    selected config — are deterministic functions of the seed."""
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+        self.now = 0.0
+        self.calls = 0
+
+    def __call__(self) -> float:
+        self.calls += 1
+        self.now += float(self.rng.random())
+        return self.now
+
+
+CANDS = [{"block": b} for b in (64, 128, 256)]
+
+
+def _make_call(cfg):
+    return lambda: jnp.zeros((4,))
+
+
+def test_shape_bucketing():
+    assert shape_bucket((1000, 1000)) == (1024, 1024)
+    assert shape_bucket((1024, 1)) == (1024, 1)
+    k1 = cache_key("jacobi_sweep", "cpu", (1000, 1000), jnp.float32)
+    k2 = cache_key("jacobi_sweep", "cpu", (1024, 1024), jnp.float32)
+    k3 = cache_key("jacobi_sweep", "cpu", (2048, 2048), jnp.float32)
+    assert k1 == k2 and k1 != k3
+    assert cache_key("jacobi_sweep", "cpu", (1024, 1024), jnp.bfloat16) != k2
+
+
+def test_cache_miss_times_then_hit_skips_timing(tmp_path):
+    timer = SeededTimer(0)
+    tuner = Autotuner(TuningCache(str(tmp_path / "t.json")), timer=timer)
+    e1 = tuner.tune("k", _make_call, shape=(256, 256), dtype=jnp.float32,
+                    candidates=CANDS)
+    assert e1["timed"] == len(CANDS)
+    assert timer.calls > 0
+    calls_after_miss = timer.calls
+    e2 = tuner.tune("k", _make_call, shape=(256, 256), dtype=jnp.float32,
+                    candidates=CANDS)
+    assert timer.calls == calls_after_miss        # hit: nothing re-timed
+    assert e2 == e1
+    # a second tuner on the same cache file also hits (persistence)
+    timer3 = SeededTimer(1)
+    tuner3 = Autotuner(TuningCache(str(tmp_path / "t.json")), timer=timer3)
+    e3 = tuner3.tune("k", _make_call, shape=(250, 250), dtype=jnp.float32,
+                     candidates=CANDS)           # same bucket -> same key
+    assert timer3.calls == 0
+    assert e3 == e1
+
+
+def test_corrupt_cache_file_recovers(tmp_path):
+    path = tmp_path / "t.json"
+    path.write_text("{definitely not json")
+    tuner = Autotuner(TuningCache(str(path)), timer=SeededTimer(0))
+    entry = tuner.tune("k", _make_call, shape=(64,), dtype=jnp.float32,
+                       candidates=CANDS)
+    assert entry["config"] in CANDS
+    # the rewritten file is valid JSON and round-trips
+    data = json.loads(path.read_text())
+    assert len(data["entries"]) == 1
+
+
+def test_truncated_cache_file_recovers(tmp_path):
+    path = tmp_path / "t.json"
+    path.write_text('{"version": 1, "entries": {"a": ')
+    assert TuningCache(str(path)).load() == {}
+
+
+def test_schema_corrupt_entries_are_dropped(tmp_path):
+    """Valid JSON with malformed entries (missing config/median_s) must be
+    filtered at load — not crash lookup()/observed_s() in the wrappers."""
+    path = tmp_path / "t.json"
+    good = {"config": {"block": 64}, "median_s": 1e-3}
+    path.write_text(json.dumps({"version": 1, "entries": {
+        "k|cpu|256x256|float32": {"median": 1},          # wrong keys
+        "k|cpu|512x512|float32": {"config": "x", "median_s": 1e-3},
+        "k|cpu|64x64|float32": good,
+    }}))
+    tuner = Autotuner(TuningCache(str(path)))
+    assert tuner.lookup("k", (256, 256), jnp.float32, backend="cpu") is None
+    assert tuner.observed_s("k", (512, 512), jnp.float32, backend="cpu") is None
+    assert tuner.lookup("k", (64, 64), jnp.float32, backend="cpu") == good["config"]
+
+
+def test_unserializable_config_save_is_not_fatal(tmp_path):
+    """A non-JSON-serializable candidate value must not discard the tuned
+    result or leak mkstemp temp files."""
+    tuner = Autotuner(TuningCache(str(tmp_path / "t.json")),
+                      timer=SeededTimer(0))
+    cands = [{"block": object()}]                 # json.dump -> TypeError
+    e = tuner.tune("k", lambda cfg: (lambda: jnp.zeros((2,))), shape=(64,),
+                   dtype=jnp.float32, candidates=cands)
+    assert e["timed"] == 1                        # tuning result survived
+    assert [p.name for p in tmp_path.iterdir()
+            if p.suffix == ".tmp"] == []          # no temp-file leak
+
+
+def test_selection_deterministic_under_seeded_timer(tmp_path):
+    picks = []
+    for run in range(2):
+        tuner = Autotuner(TuningCache(str(tmp_path / f"t{run}.json")),
+                          timer=SeededTimer(42))
+        e = tuner.tune("k", _make_call, shape=(128, 128), dtype=jnp.float32,
+                       candidates=CANDS)
+        picks.append(tuple(sorted(e["config"].items())))
+    assert picks[0] == picks[1]
+
+
+def test_failing_candidates_are_skipped(tmp_path):
+    def make_call(cfg):
+        if cfg["block"] == 128:
+            raise ValueError("invalid for shape")
+        return lambda: jnp.zeros((2,))
+
+    tuner = Autotuner(TuningCache(str(tmp_path / "t.json")),
+                      timer=SeededTimer(0))
+    e = tuner.tune("k", make_call, shape=(64,), dtype=jnp.float32,
+                   candidates=CANDS)
+    assert e["timed"] == len(CANDS) - 1
+    assert e["config"]["block"] != 128
+
+    with pytest.raises(RuntimeError):
+        tuner.tune("k2", lambda cfg: (_ for _ in ()).throw(ValueError()),
+                   shape=(64,), dtype=jnp.float32, candidates=CANDS)
+
+
+def test_ops_wrappers_consult_cache(tmp_path, monkeypatch):
+    """A tuned entry transparently supplies block sizes to the wrappers."""
+    path = str(tmp_path / "t.json")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", path)
+    cache = TuningCache(path)
+    key = cache_key("jacobi_sweep", "cpu", (256, 256), jnp.float32)
+    cache.put(key, {"config": {"row_block": 64, "col_block": 32},
+                    "median_s": 1e-3, "flops": 0.0, "bytes": 0.0})
+
+    from repro.kernels.jacobi_sweep.ops import _tuned_blocks
+    assert _tuned_blocks(256, jnp.float32, None, None) == (64, 32)
+    # explicit blocks always win over the cache
+    assert _tuned_blocks(256, jnp.float32, 128, 128) == (128, 128)
+    # untuned bucket falls back to defaults
+    assert _tuned_blocks(4096, jnp.float32, None, None) == (256, 256)
+
+
+def test_observed_s_nearest_bucket_scaling(tmp_path):
+    """A miss with nearest=True falls back to the closest tuned bucket of
+    the same kernel/backend/dtype, scaled by the element-count ratio."""
+    cache = TuningCache(str(tmp_path / "t.json"))
+    cache.put(cache_key("jacobi_sweep", "cpu", (2048, 2048), jnp.float32),
+              {"config": {}, "median_s": 1e-2, "backend": "cpu"})
+    tuner = Autotuner(cache)
+    # exact hit unaffected
+    assert tuner.observed_s("jacobi_sweep", (2048, 2048), jnp.float32,
+                            backend="cpu") == pytest.approx(1e-2)
+    # miss without nearest stays None
+    assert tuner.observed_s("jacobi_sweep", (2709, 2709), jnp.float32,
+                            backend="cpu") is None
+    # nearest: scaled by actual work ratio (2709² / 2048²)
+    t = tuner.observed_s("jacobi_sweep", (2709, 2709), jnp.float32,
+                         backend="cpu", nearest=True)
+    assert t == pytest.approx(1e-2 * 2709 ** 2 / 2048 ** 2)
+    # wrong kernel/backend/dtype never match
+    assert tuner.observed_s("rmsnorm", (2709, 2709), jnp.float32,
+                            backend="cpu", nearest=True) is None
+    assert tuner.observed_s("jacobi_sweep", (2709, 2709), jnp.bfloat16,
+                            backend="cpu", nearest=True) is None
+
+
+def test_calibrated_cost_params(tmp_path):
+    cache = TuningCache(str(tmp_path / "t.json"))
+    tuner = Autotuner(cache)
+    base = calibrated_cost_params(tuner=tuner)     # empty cache -> base
+    assert base.peak_flops == 100e9
+
+    cache.put("a|cpu|256x256|float32",
+              {"config": {}, "median_s": 1e-3, "flops": 2e9, "bytes": 4e8,
+               "backend": "cpu"})
+    cache.put("b|cpu|256x256|float32",
+              {"config": {}, "median_s": 1e-3, "flops": 1e9, "bytes": 8e8,
+               "backend": "cpu"})
+    # a foreign-backend entry must NOT poison the calibration
+    cache.put("c|tpu|256x256|float32",
+              {"config": {}, "median_s": 1e-6, "flops": 2e12, "bytes": 4e11,
+               "backend": "tpu"})
+    p = calibrated_cost_params(tuner=tuner, backend="cpu")
+    # best achieved rates across entries
+    assert p.peak_flops == pytest.approx(2e9 / 1e-3)
+    assert p.mem_bw == pytest.approx(8e8 / 1e-3)
+    assert p.link_bw == base.link_bw
+
+
+def test_get_tuner_per_cache_path(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "a.json"))
+    ta = tuning.get_tuner()
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "b.json"))
+    tb = tuning.get_tuner()
+    assert ta is not tb and ta.cache.path != tb.cache.path

@@ -21,6 +21,10 @@ Suites:
             2709/4209/7209 × 500 table).  -> BENCH_jacobi.json
   hypar   — framework-vs-tailored on the LM training workload.
             -> BENCH_hypar.json
+  serve   — request-level continuous batching (Poisson trace, mixed
+            prompt lengths) for --engine direct AND hypar: tok/s, TTFT,
+            p50/p95 per-token latency, slot occupancy.
+            -> BENCH_serve.json
 
 ``--smoke`` shrinks every suite to CI-sized shapes (used by the
 benchmark-smoke CI step, which uploads the BENCH_*.json artifacts).
@@ -81,6 +85,20 @@ def suite_hypar(*, smoke: bool = False) -> list[dict]:
     return rows
 
 
+def suite_serve(*, smoke: bool = False) -> list[dict]:
+    print("== serve (request-level continuous batching, direct vs hypar) ==")
+    from . import serve_bench
+    rows = serve_bench.run(smoke=smoke)
+    for r in rows:
+        print(f"  {r['name']:>14}: {r['tok_per_s']:8.1f} tok/s  "
+              f"ttft p50 {r['ttft_p50_s'] * 1e3:7.1f} ms  "
+              f"lat p50/p95 {r['lat_p50_s'] * 1e3:6.1f}/"
+              f"{r['lat_p95_s'] * 1e3:6.1f} ms  "
+              f"occ {r['occupancy'] * 100:4.0f}%")
+    _write("BENCH_serve.json", rows)
+    return rows
+
+
 def print_roofline() -> None:
     """Summarise the dry-run roofline table if present (produced by
     ``python -m repro.launch.dryrun --all``) — print-only, no BENCH file."""
@@ -99,7 +117,7 @@ def print_roofline() -> None:
 
 
 SUITES = {"kernels": suite_kernels, "jacobi": suite_jacobi,
-          "hypar": suite_hypar}
+          "hypar": suite_hypar, "serve": suite_serve}
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -117,6 +135,8 @@ def main(argv: list[str] | None = None) -> None:
         suite_jacobi(paper=args.paper, smoke=args.smoke)
     if args.suite in ("hypar", "all"):
         suite_hypar(smoke=args.smoke)
+    if args.suite in ("serve", "all"):
+        suite_serve(smoke=args.smoke)
     if args.suite == "all":
         print_roofline()
 

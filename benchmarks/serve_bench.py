@@ -1,0 +1,89 @@
+"""Serving benchmark: request-level continuous batching, direct vs hypar.
+
+Replays the same open-loop request trace (Poisson arrivals, mixed prompt
+lengths) through ``ServeScheduler`` twice — once with direct slot filling,
+once with every request routed through the HyPar job machinery
+(dynamic control-spawned jobs + MasterScheduler placement + ResultStore
+retention) — and emits one BENCH row per engine.  The measurement itself
+is ``launch/serve.py::run_trace`` (same code path as the CLI), so the
+BENCH rows and the CLI report the same metric definitions.
+
+Row schema (via ``kernel_bench.bench_row``; ``median_s`` is the median
+per-token decode latency so the serve trajectory is comparable across PRs
+like every other suite)::
+
+    name=serve_<engine>  median_s=<p50 token latency>
+    extras: tok_per_s, ttft_p50_s, ttft_p95_s, lat_p50_s, lat_p95_s,
+            occupancy, n_requests, gen_tokens, overhead_pct vs direct
+
+Run via ``python -m benchmarks.run --suite serve [--smoke]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from .kernel_bench import bench_row
+
+
+@dataclasses.dataclass
+class _Args:
+    """The subset of launch/serve.py CLI args run_trace consumes."""
+    engine: str
+    batch: int
+    strategy: str
+    prompt_lens: tuple
+    max_pending: int | None
+    n_requests: int
+    rate: float
+    max_new: int
+    seed: int
+
+
+def _smoke_args():
+    return dict(batch=4, n_requests=8, max_new=8, prompt_lens=(6, 10, 14))
+
+
+def _full_args():
+    return dict(batch=8, n_requests=48, max_new=32, prompt_lens=(16, 32, 64))
+
+
+def run_engine(engine: str, *, cfg, params, batch, n_requests, max_new,
+               prompt_lens, rate_per_s: float = 0.0, seed: int = 0) -> dict:
+    from repro.launch.serve import run_trace
+    from repro.serve import SamplingParams
+
+    args = _Args(engine=engine, batch=batch, strategy="greedy",
+                 prompt_lens=tuple(prompt_lens), max_pending=None,
+                 n_requests=n_requests, rate=rate_per_s, max_new=max_new,
+                 seed=seed)
+    return run_trace(cfg, params, args, sp=SamplingParams())
+
+
+def run(smoke: bool = False) -> list[dict]:
+    from repro.configs import get_smoke_config
+    from repro.models.transformer import init_params
+
+    kw = _smoke_args() if smoke else _full_args()
+    cfg = get_smoke_config("qwen2-1.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    rows = []
+    direct_tok_s = None
+    for engine in ("direct", "hypar"):
+        s = run_engine(engine, cfg=cfg, params=params, **kw)
+        overhead = 0.0
+        if engine == "direct":
+            direct_tok_s = s["tok_per_s"]
+        elif direct_tok_s and s["tok_per_s"] > 0:
+            overhead = (direct_tok_s / s["tok_per_s"] - 1.0) * 100.0
+        rows.append(bench_row(
+            f"serve_{engine}", (kw["batch"], kw["max_new"]), "int32",
+            s["lat_p50_s"],
+            tok_per_s=s["tok_per_s"],
+            ttft_p50_s=s["ttft_p50_s"], ttft_p95_s=s["ttft_p95_s"],
+            lat_p50_s=s["lat_p50_s"], lat_p95_s=s["lat_p95_s"],
+            occupancy=s["occupancy"], n_requests=s["n_requests"],
+            gen_tokens=s["gen_tokens"], overhead_pct=overhead))
+    return rows

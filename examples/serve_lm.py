@@ -1,7 +1,13 @@
-"""Batched serving example: prefill + decode with continuous batching on a
-reduced config of an assigned architecture.
+"""Serving examples on a reduced config of an assigned architecture.
 
-Run:  PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-370m]
+Wave mode (batched prefill + decode, continuous batching demo)::
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-370m]
+
+Request-trace mode (Poisson arrivals, mixed prompt lengths, HyPar
+dynamic-job scheduling)::
+
+    PYTHONPATH=src python examples/serve_lm.py --trace --engine hypar
 """
 import sys
 
@@ -9,4 +15,9 @@ from repro.launch.serve import main
 
 args = ["--arch", "qwen2-1.5b", "--smoke", "--batch", "4",
         "--prompt-len", "16", "--max-new", "16", "--requests", "2"]
-main(args + sys.argv[1:])
+extra = sys.argv[1:]
+if "--trace" in extra:
+    args = ["--arch", "qwen2-1.5b", "--smoke", "--batch", "4",
+            "--max-new", "12", "--n-requests", "8",
+            "--prompt-lens", "6", "10", "14"]
+main(args + extra)

@@ -98,12 +98,35 @@ def save_checkpoint(directory: str, tree, step: int, *,
     return final
 
 
+def _scan_steps(directory: str) -> list[int]:
+    try:
+        names = os.listdir(directory)
+    except OSError:
+        return []
+    steps = []
+    for d in names:
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            try:
+                steps.append(int(d.split("_")[1]))
+            except ValueError:
+                continue
+    return sorted(steps)
+
+
 def latest_step(directory: str) -> int | None:
+    """Newest complete step.  Falls back to scanning ``step_*`` dirs when
+    ``LATEST`` is missing, empty, or corrupt — a crash between the step-dir
+    rename and the pointer update must not make the restore path raise
+    (the mid-write story of DESIGN.md §6)."""
     p = os.path.join(directory, "LATEST")
-    if not os.path.exists(p):
-        return None
-    with open(p) as f:
-        return int(f.read().strip())
+    if os.path.exists(p):
+        try:
+            with open(p) as f:
+                return int(f.read().strip())
+        except (ValueError, OSError):
+            pass
+    steps = _scan_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore_checkpoint(directory: str, like, *, step: int | None = None,
@@ -195,9 +218,11 @@ class AsyncCheckpointer:
             raise err
 
     def _gc(self) -> None:
-        steps = sorted(
-            int(d.split("_")[1]) for d in os.listdir(self.directory)
-            if d.startswith("step_") and not d.endswith(".tmp"))
-        for s in steps[:-self.keep]:
+        steps = _scan_steps(self.directory)
+        # NOT steps[:-self.keep]: keep=0 would slice to steps[:0] and
+        # silently keep everything instead of deleting everything.  The
+        # max(0, ...) stops the slice going negative (and wrongly deleting)
+        # while fewer than ``keep`` checkpoints exist.
+        for s in steps[:max(0, len(steps) - self.keep)]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
                           ignore_errors=True)

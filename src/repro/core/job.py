@@ -302,6 +302,26 @@ class JobGraph:
         self._by_name[job.name] = job
         self._validate_job(job)
 
+    def remove_job(self, name: str) -> Job:
+        """Retire a completed dynamic job from the graph (serving-time GC).
+
+        Long-lived request streams (repro.serve.scheduler) add one dynamic
+        job per admitted request; without retirement the graph grows without
+        bound.  Removal is only legal when no remaining job consumes the
+        retired job's results."""
+        job = self._by_name.get(name)
+        if job is None:
+            raise GraphValidationError(f"cannot remove unknown job {name}")
+        consumers = [j.name for j in self.jobs()
+                     if name in j.deps() and j.name != name]
+        if consumers:
+            raise GraphValidationError(
+                f"cannot remove {name}: still consumed by {consumers}")
+        self.segments[job.segment].jobs.remove(job)
+        del self._by_name[name]
+        self.bound_inputs.pop(name, None)
+        return job
+
     # -- introspection ----------------------------------------------------------
     def job(self, name: str) -> Job:
         return self._by_name[name]

@@ -1,14 +1,26 @@
 """Serving driver: batched requests against a (reduced) model.
 
-Demonstrates the full serving path — batched prefill, token-by-token
-decode with KV/SSM caches, greedy & temperature sampling, and slot-based
-continuous batching (a finished request's slot is re-prefilled without
-disturbing the rest of the batch).
+Two modes:
 
-Example::
+* **wave** (default) — fixed-size request waves through ``Engine.generate``
+  (batched prefill, token-by-token decode, greedy & temperature sampling).
+  Throughput counts *real* generated tokens (stop-token padding rows after
+  early termination are excluded) and the first wave — which pays jit
+  compilation — is reported separately and excluded from the steady-state
+  tok/s.
+* **trace** (``--trace``) — request-level continuous batching through
+  ``ServeScheduler``: Poisson arrivals, mixed prompt lengths, admission
+  control, prefill-into-free-slot / decode-live-batch / retire lifecycle.
+  ``--engine hypar`` routes every request through the core job machinery
+  (dynamic control-spawned jobs, MasterScheduler placement, ResultStore
+  retention) — see DESIGN.md §8.
+
+Examples::
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --batch 4 --prompt-len 32 --max-new 32
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --trace --engine hypar --n-requests 32 --rate 64
 """
 from __future__ import annotations
 
@@ -20,7 +32,141 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config, get_smoke_config
-from repro.serve import Engine, SamplingParams
+from repro.serve import (Engine, HyParRequestTracker, Request, RequestQueue,
+                         SamplingParams, ServeScheduler, count_generated)
+
+
+def build_trace(rng: np.random.Generator, cfg, *, n_requests: int,
+                rate_per_s: float, prompt_lens: list[int],
+                max_new: int) -> list[Request]:
+    """Open-loop request trace: Poisson arrivals (exponential gaps at
+    ``rate_per_s``), prompt lengths drawn uniformly from ``prompt_lens``."""
+    t = 0.0
+    reqs = []
+    for rid in range(n_requests):
+        t += rng.exponential(1.0 / rate_per_s) if rate_per_s > 0 else 0.0
+        S = int(rng.choice(prompt_lens))
+        toks = rng.integers(0, cfg.vocab_size - 1, (S,)).astype(np.int32)
+        enc = None
+        if cfg.family == "encdec":
+            enc = jnp.asarray(rng.standard_normal(
+                (1, 64, cfg.d_model), dtype=np.float32))
+        reqs.append(Request(rid=rid, tokens=toks, max_new=max_new,
+                            arrival_s=t, enc_embeds=enc))
+    return reqs
+
+
+def warmup_requests(rng: np.random.Generator, cfg, *, prompt_lens,
+                    ) -> list[Request]:
+    """One request per distinct prompt length, all arriving at t=0 — pays
+    every per-bucket slot-prefill compilation before the measured run."""
+    reqs = []
+    for rid, S in enumerate(sorted(set(int(l) for l in prompt_lens))):
+        toks = rng.integers(0, cfg.vocab_size - 1, (S,)).astype(np.int32)
+        enc = None
+        if cfg.family == "encdec":
+            enc = jnp.asarray(rng.standard_normal(
+                (1, 64, cfg.d_model), dtype=np.float32))
+        reqs.append(Request(rid=rid, tokens=toks, max_new=2, arrival_s=0.0,
+                            enc_embeds=enc))
+    return reqs
+
+
+def make_scheduler(cfg, params, args, *, sp: SamplingParams,
+                   max_len: int) -> ServeScheduler:
+    eng = Engine(cfg, params, batch=args.batch, max_len=max_len)
+    tracker = None
+    if args.engine == "hypar":
+        n_params = sum(x.size for x in jax.tree.leaves(params))
+        tracker = HyParRequestTracker(args.batch, strategy=args.strategy,
+                                      flops_per_token=2.0 * n_params)
+    buckets = sorted({1 << (int(l) - 1).bit_length() for l in args.prompt_lens
+                      if l < max_len} | {16})
+    return ServeScheduler(eng, sp=sp, tracker=tracker, buckets=buckets,
+                          queue=RequestQueue(max_pending=args.max_pending))
+
+
+def run_trace(cfg, params, args, *, sp: SamplingParams) -> dict:
+    max_len = max(args.prompt_lens) + args.max_new + 8
+    rng = np.random.default_rng(args.seed)
+
+    # warmup on the SAME scheduler: Engine jit caches are per-instance, so
+    # a throwaway warmup engine would leave the measured run to pay every
+    # prefill/decode/splice compilation it claims to have excluded
+    sched = make_scheduler(cfg, params, args, sp=sp, max_len=max_len)
+    sched.run(warmup_requests(rng, cfg, prompt_lens=args.prompt_lens))
+    sched.reset_metrics()
+
+    reqs = build_trace(rng, cfg, n_requests=args.n_requests,
+                       rate_per_s=args.rate, prompt_lens=list(args.prompt_lens),
+                       max_new=args.max_new)
+    t0 = time.perf_counter()
+    results = sched.run(reqs)
+    wall = time.perf_counter() - t0
+
+    n_tok = sum(r.n_generated for r in results)
+    # NaN, not 0.0, when nothing completed: a broken/all-shed run must not
+    # record perfect-looking latencies into the BENCH trajectory
+    ttfts = (np.array([r.ttft_s for r in results]) if results
+             else np.array([np.nan]))
+    lats = (np.array([l for r in results for l in r.step_latencies_s])
+            if any(r.step_latencies_s for r in results)
+            else np.array([np.nan]))
+    stats = {
+        "engine": args.engine,
+        "n_requests": len(results),
+        "n_rejected": sched.queue.n_rejected,
+        "gen_tokens": n_tok,
+        "wall_s": wall,
+        "tok_per_s": n_tok / wall if wall > 0 else 0.0,
+        "ttft_p50_s": float(np.percentile(ttfts, 50)),
+        "ttft_p95_s": float(np.percentile(ttfts, 95)),
+        "lat_p50_s": float(np.percentile(lats, 50)),
+        "lat_p95_s": float(np.percentile(lats, 95)),
+        "occupancy": sched.occupancy,
+    }
+    return stats
+
+
+def run_waves(cfg, params, args, *, sp: SamplingParams) -> None:
+    rng = np.random.default_rng(args.seed)
+    key = jax.random.PRNGKey(args.seed)
+    max_len = args.prompt_len + args.max_new + 8
+    eng = Engine(cfg, params, batch=args.batch, max_len=max_len)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M batch={args.batch} "
+          f"max_len={max_len}")
+
+    total_tokens = steady_tokens = 0
+    steady_s = 0.0
+    for wave in range(args.requests):
+        prompts = rng.integers(
+            0, cfg.vocab_size - 1, (args.batch, args.prompt_len)).astype(np.int32)
+        enc = None
+        if cfg.family == "encdec":
+            enc = jnp.asarray(rng.standard_normal(
+                (args.batch, 64, cfg.d_model), dtype=np.float32))
+        t0 = time.perf_counter()
+        out = eng.generate(jnp.asarray(prompts), max_new=args.max_new, sp=sp,
+                           key=jax.random.fold_in(key, wave), enc_embeds=enc)
+        dt = time.perf_counter() - t0
+        n_real = count_generated(out, sp.stop_token)
+        total_tokens += n_real
+        if wave == 0:
+            print(f"wave 0 (compile): {n_real} tokens in {dt:.1f}s "
+                  f"(excluded from steady-state tok/s)")
+        else:
+            steady_tokens += n_real
+            steady_s += dt
+        print(f"wave {wave}: generated {out.shape} -> {n_real} real tokens; "
+              f"sample row: {out[0, :10].tolist()}")
+    if steady_s > 0:
+        print(f"throughput: {steady_tokens / steady_s:.1f} tok/s steady-state "
+              f"({steady_tokens} tokens in {steady_s:.1f}s; "
+              f"{total_tokens} total incl. compile wave)")
+    else:
+        print(f"throughput: n/a (single wave pays compilation; "
+              f"{total_tokens} tokens)")
 
 
 def main(argv=None):
@@ -33,39 +179,42 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--requests", type=int, default=2,
-                    help="waves of requests (continuous batching demo)")
+                    help="waves of requests (wave mode)")
+    # request-trace mode
+    ap.add_argument("--trace", action="store_true",
+                    help="request-level continuous batching from a trace")
+    ap.add_argument("--engine", choices=["direct", "hypar"], default="direct",
+                    help="trace mode: direct slot filling vs HyPar "
+                         "dynamic-job scheduling")
+    ap.add_argument("--strategy", choices=["greedy", "cost"], default="greedy",
+                    help="hypar engine: MasterScheduler placement strategy")
+    ap.add_argument("--n-requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate, requests/s (0 = all at once)")
+    ap.add_argument("--prompt-lens", type=int, nargs="+", default=[8, 16, 24],
+                    help="trace mode: mixed prompt lengths")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="admission control: shed beyond this queue depth")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    rng = np.random.default_rng(args.seed)
-    key = jax.random.PRNGKey(args.seed)
-
     from repro.models.transformer import init_params
-    params = init_params(cfg, key)
-    n_params = sum(x.size for x in jax.tree.leaves(params))
-    max_len = args.prompt_len + args.max_new + 8
-    eng = Engine(cfg, params, batch=args.batch, max_len=max_len)
-    print(f"arch={cfg.name} params={n_params/1e6:.1f}M batch={args.batch} "
-          f"max_len={max_len}")
-
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
     sp = SamplingParams(temperature=args.temperature)
-    total_tokens = 0
-    t0 = time.time()
-    for wave in range(args.requests):
-        prompts = rng.integers(
-            0, cfg.vocab_size - 1, (args.batch, args.prompt_len)).astype(np.int32)
-        enc = None
-        if cfg.family == "encdec":
-            enc = jnp.asarray(rng.standard_normal(
-                (args.batch, 64, cfg.d_model), dtype=np.float32))
-        out = eng.generate(jnp.asarray(prompts), max_new=args.max_new, sp=sp,
-                           key=jax.random.fold_in(key, wave), enc_embeds=enc)
-        total_tokens += out.size
-        print(f"wave {wave}: generated {out.shape} tokens; "
-              f"sample row: {out[0, :10].tolist()}")
-    dt = time.time() - t0
-    print(f"throughput: {total_tokens / dt:.1f} tok/s "
-          f"({total_tokens} tokens in {dt:.1f}s)")
+
+    if args.trace:
+        stats = run_trace(cfg, params, args, sp=sp)
+        print(f"engine={stats['engine']} requests={stats['n_requests']} "
+              f"(+{stats['n_rejected']} shed) tokens={stats['gen_tokens']}")
+        print(f"tok/s={stats['tok_per_s']:.1f} "
+              f"ttft p50={stats['ttft_p50_s']*1e3:.1f}ms "
+              f"p95={stats['ttft_p95_s']*1e3:.1f}ms "
+              f"lat p50={stats['lat_p50_s']*1e3:.1f}ms "
+              f"p95={stats['lat_p95_s']*1e3:.1f}ms "
+              f"occupancy={stats['occupancy']*100:.0f}%")
+        return stats
+    run_waves(cfg, params, args, sp=sp)
+    return None
 
 
 if __name__ == "__main__":

@@ -358,6 +358,24 @@ def _is_delta(upd) -> bool:
     return isinstance(upd, dict) and "k_delta" in upd
 
 
+def _write_kv(buf, delta, pos, *, batch_axis: int):
+    """Write a K/V delta into a cache buffer at the token position.
+
+    ``pos`` scalar — one dynamic-update-slice for the whole batch (training /
+    uniform decode).  ``pos`` (B,) — per-slot positions (continuous batching:
+    slots inserted at different times sit at different lengths), written as a
+    vmap over the batch axis, one slice per slot.
+    """
+    idx = jnp.asarray(pos)
+    if idx.ndim == 0:
+        return jax.lax.dynamic_update_slice(
+            buf, delta, (0,) * (buf.ndim - 2) + (idx, 0))
+    per_row = lambda c, d, i: jax.lax.dynamic_update_slice(
+        c, d, (0,) * (c.ndim - 2) + (i, 0))
+    return jax.vmap(per_row, in_axes=(batch_axis, batch_axis, 0),
+                    out_axes=batch_axis)(buf, delta, idx)
+
+
 def _apply_cache_update(old_layer_cache, upd, pos):
     """Apply a block's cache update to an UNSTACKED layer cache."""
     if upd is None:
@@ -365,11 +383,9 @@ def _apply_cache_update(old_layer_cache, upd, pos):
     out = {}
     for key, val in upd.items():
         if key == "self" and _is_delta(val):
-            idx = jnp.reshape(jnp.asarray(pos), ())
             out["self"] = {
-                kk: jax.lax.dynamic_update_slice(
-                    old_layer_cache["self"][kk], val[f"{kk}_delta"],
-                    (0, 0, idx, 0))
+                kk: _write_kv(old_layer_cache["self"][kk],
+                              val[f"{kk}_delta"], pos, batch_axis=0)
                 for kk in ("k", "v")}
         else:
             out[key] = val
@@ -380,19 +396,18 @@ def _apply_stacked_updates(stacked, updates, pos):
     """Apply scan-collected per-layer updates to a stacked cache.
 
     KV deltas (G,B,KV,S,D) are written with ONE dynamic-update-slice at the
-    token position; SSM states come out of the scan already whole, stacked —
-    they simply replace the old buffers."""
+    token position (or one per slot for per-slot ``pos`` vectors); SSM states
+    come out of the scan already whole, stacked — they simply replace the old
+    buffers."""
     if updates is None:
         return stacked
     new = dict(stacked)
     for key, val in updates.items():
         if key == "self" and _is_delta(val):
-            idx = jnp.reshape(jnp.asarray(pos), ())
             new["self"] = {
-                kk: jax.lax.dynamic_update_slice(
-                    stacked["self"][kk],
-                    val[f"{kk}_delta"].astype(stacked["self"][kk].dtype),
-                    (0, 0, 0, idx, 0))
+                kk: _write_kv(stacked["self"][kk],
+                              val[f"{kk}_delta"].astype(stacked["self"][kk].dtype),
+                              pos, batch_axis=1)
                 for kk in ("k", "v")}
         else:
             new[key] = val.astype(stacked[key].dtype)
@@ -429,10 +444,21 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens, *,
     else:
         x = embeds.astype(jnp.dtype(cfg.compute_dtype))
     S = x.shape[1]
-    pos = cache["len"]
-    positions = pos + jnp.arange(S, dtype=jnp.int32)
+    pos = jnp.asarray(cache["len"])
+    # ``len`` may be a scalar (uniform batch) or (B,) vector (per-slot
+    # lengths under continuous batching — slots inserted at different times
+    # sit at different positions).  Vector lengths are decode-only: batched
+    # prefill always starts from a fresh (scalar, zero-length) cache.
+    if pos.ndim == 1 and S > 1:
+        raise ValueError("per-slot cache lengths only support single-token "
+                         "decode (S == 1); prefill from a fresh cache")
+    if pos.ndim == 1:
+        positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)   # (B, S)
+    else:
+        positions = pos + jnp.arange(S, dtype=jnp.int32)            # (S,)
     if cfg.family == "encdec":
-        x = x + params["dec_pos"][positions][None].astype(x.dtype)
+        pe = params["dec_pos"][positions]
+        x = x + (pe if positions.ndim > 1 else pe[None]).astype(x.dtype)
 
     # Cache-update architecture (§Perf iterations 2-8): during one step the
     # KV cache is READ-ONLY — the new token's contribution enters attention

@@ -1,1 +1,10 @@
-from .engine import Engine, SamplingParams
+from .engine import Engine, SamplingParams, count_generated
+from .scheduler import (DEFAULT_BUCKETS, HyParRequestTracker, Request,
+                        RequestQueue, RequestResult, ServeScheduler,
+                        SlotState)
+
+__all__ = [
+    "Engine", "SamplingParams", "count_generated",
+    "Request", "RequestResult", "RequestQueue", "SlotState",
+    "ServeScheduler", "HyParRequestTracker", "DEFAULT_BUCKETS",
+]

@@ -1,11 +1,30 @@
 """Batched serving engine: prefill + decode with slot-based continuous
 batching.
 
-The decode fleet is the HyPar picture one level up (DESIGN.md §4): each
+The decode fleet is the HyPar picture one level up (DESIGN.md §4, §8): each
 *slot* is a job whose KV cache is retained device-local (``no_send_back``);
 a finished request frees its slot and a waiting request is prefilled into
 it (``insert``), without disturbing the other slots — dynamic job creation
-at serving time.
+at serving time.  The request-level scheduler that drives this lives in
+``repro.serve.scheduler``.
+
+Compilation contract: the engine owns exactly three jitted programs —
+batched prefill, single-step decode, and the slot splice — each compiled
+once per input-shape signature and reused for every request.  Slot
+insertion reuses the *same* prefill program at the ``(1, S)`` signature, so
+N inserts of same-length (bucketed) prompts cost one compilation total.
+``trace_count(name)`` exposes the per-program trace counters the
+compile-counter test asserts on.
+
+Per-slot positions: after the first prefill the cache ``len`` is a ``(B,)``
+vector, one length per slot, so a short prompt inserted into a batch that
+has already decoded far ahead attends, RoPEs, and writes its KV at *its
+own* position rather than the global cache length.  The vector form is
+kept even while all slots are uniform — deliberately: interrupted and
+uninterrupted batches then run the SAME compiled decode program, which is
+what makes surviving slots bit-identical under continuous batching.  The
+cost is one vmapped KV-write slice per slot instead of one batched slice;
+raw ``decode_step`` users (training, parity tests) keep the scalar path.
 
 Sharding comes from the ambient ``use_rules`` context: the KV cache batch
 axis maps to ("pod","data"), the KV sequence axis to "model"
@@ -14,20 +33,20 @@ over every axis).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.transformer import decode_step, forward, init_cache, layer_plan
+from repro.models.transformer import decode_step, init_cache, layer_plan
 from repro.models.layers import apply_norm
 from repro.models.transformer import _run_stack  # encoder reuse
 
-__all__ = ["Engine", "SamplingParams"]
+__all__ = ["Engine", "SamplingParams", "count_generated"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,15 +56,31 @@ class SamplingParams:
     stop_token: int = -1           # -1 => never stop early
 
 
+def count_generated(out: np.ndarray, stop_token: int) -> int:
+    """Real generated tokens in a ``generate`` result: stop-token padding
+    rows emitted after a sequence terminated do not count (the first stop
+    token itself does — the model produced it)."""
+    out = np.asarray(out)
+    if stop_token < 0:
+        return int(out.size)
+    total = 0
+    for row in out:
+        hits = np.flatnonzero(row == stop_token)
+        total += int(hits[0]) + 1 if hits.size else row.size
+    return total
+
+
 class Engine:
-    """Owns jitted prefill/decode programs for one model + max_len."""
+    """Owns jitted prefill/decode/splice programs for one model + max_len."""
 
     def __init__(self, cfg: ModelConfig, params, *, batch: int, max_len: int,
                  donate_cache: bool = True):
         self.cfg, self.params = cfg, params
         self.batch, self.max_len = batch, max_len
+        self._trace_counts: collections.Counter = collections.Counter()
 
-        def _prefill(params, cache, tokens, embeds, enc_embeds):
+        def _prefill(params, cache, tokens, embeds, enc_embeds, last_idx):
+            self._trace_counts["prefill"] += 1
             enc_out = None
             if cfg.family == "encdec":
                 plan = layer_plan(cfg)
@@ -57,16 +92,49 @@ class Engine:
                 enc_out = apply_norm(cfg, params["enc_norm_f"], e)
             logits, cache = decode_step(cfg, params, cache, tokens,
                                         enc_out=enc_out, embeds=embeds)
-            return logits[:, -1:], cache, enc_out
+            # logits at the *true* last prompt token (bucketed prompts are
+            # right-padded; the pad tail must not pick the sampled logits)
+            last = jax.lax.dynamic_slice_in_dim(logits, last_idx, 1, axis=1)
+            B = (tokens if tokens is not None else embeds).shape[0]
+            cache = {**cache, "len": jnp.broadcast_to(cache["len"], (B,))}
+            return last, cache, enc_out
 
         def _decode(params, cache, tokens, enc_out):
+            self._trace_counts["decode"] += 1
             return decode_step(cfg, params, cache, tokens, enc_out=enc_out)
+
+        def _splice(cache, mini_cache, enc_out, mini_enc, slot, true_len):
+            self._trace_counts["splice"] += 1
+            new_groups = [
+                jax.tree.map(lambda f, o: _splice_batch(f, o, slot), gf, go)
+                for gf, go in zip(cache["groups"], mini_cache["groups"])]
+            new_tail = [
+                jax.tree.map(lambda f, o: _splice_batch(f, o, slot), tf, to)
+                for tf, to in zip(cache["tail"], mini_cache["tail"])]
+            lens = jnp.broadcast_to(jnp.asarray(cache["len"]), (batch,))
+            lens = lens.at[slot].set(true_len)
+            new_enc = enc_out
+            if enc_out is not None:
+                new_enc = jax.lax.dynamic_update_slice_in_dim(
+                    enc_out, mini_enc.astype(enc_out.dtype), slot, axis=0)
+            return ({"groups": new_groups, "tail": new_tail, "len": lens},
+                    new_enc)
 
         donate = (1,) if donate_cache else ()
         self._prefill = jax.jit(_prefill, donate_argnums=donate)
         self._decode = jax.jit(_decode, donate_argnums=donate)
+        self._splice = jax.jit(_splice,
+                               donate_argnums=(0,) if donate_cache else ())
+        enc_len = 1 if cfg.family == "encdec" else 0
+        self._fresh_b1 = jax.jit(
+            functools.partial(init_cache, cfg, 1, max_len, enc_len=enc_len))
         self._enc_out = None
         self.cache = None
+
+    def trace_count(self, name: str) -> int:
+        """How many times program ``name`` (prefill|decode|splice) has been
+        traced (= compiled signatures) so far."""
+        return self._trace_counts[name]
 
     # -- lifecycle -------------------------------------------------------------
     def fresh_cache(self):
@@ -75,11 +143,29 @@ class Engine:
             enc_len = 1  # cross K/V recomputed from enc_out, no cache needed
         return init_cache(self.cfg, self.batch, self.max_len, enc_len=enc_len)
 
+    def ensure_batch(self, *, enc_len: int | None = None) -> None:
+        """Initialise an empty live batch (all slots free, zero lengths) so
+        insert-driven serving can start without a full-batch prefill.  For
+        encdec models ``enc_len`` sizes the encoder-output buffer the per-slot
+        inserts splice into."""
+        if self.cache is None:
+            cache = self.fresh_cache()
+            cache["len"] = jnp.zeros((self.batch,), jnp.int32)
+            self.cache = cache
+        if self.cfg.family == "encdec" and self._enc_out is None:
+            if enc_len is None:
+                raise ValueError("encdec ensure_batch() needs enc_len to size "
+                                 "the encoder-output buffer")
+            self._enc_out = jnp.zeros(
+                (self.batch, enc_len, self.cfg.d_model),
+                jnp.dtype(self.cfg.compute_dtype))
+
     def prefill(self, tokens=None, *, embeds=None, enc_embeds=None):
         """tokens: (batch, S). Returns last-position logits (batch, 1, V)."""
         self.cache = self.fresh_cache()
+        S = (tokens if tokens is not None else embeds).shape[1]
         logits, self.cache, self._enc_out = self._prefill(
-            self.params, self.cache, tokens, embeds, enc_embeds)
+            self.params, self.cache, tokens, embeds, enc_embeds, S - 1)
         return logits
 
     def decode(self, tokens):
@@ -125,37 +211,51 @@ class Engine:
         return np.stack(out, axis=1)
 
     # -- continuous batching -----------------------------------------------------
-    def insert(self, slot: int, tokens_1xS) -> None:
+    def insert(self, slot: int, tokens_1xS, *, true_len: int | None = None,
+               enc_embeds=None):
         """Prefill a single request into slot ``slot`` without disturbing the
-        other slots (slot-local cache splice)."""
-        mini = Engine(self.cfg, self.params, batch=1, max_len=self.max_len,
-                      donate_cache=False)
-        mini.prefill(tokens_1xS)
+        other slots (slot-local cache splice).
 
-        def splice(full, one):
-            return jax.lax.dynamic_update_slice_in_dim(full, one, slot, axis=0)
+        ``tokens_1xS`` may be right-padded to a bucket length; ``true_len``
+        is the unpadded prompt length (defaults to the full width).  The
+        slot's cache length is set to ``true_len`` so subsequent decode
+        steps position, mask, and write at the request's own offset.
 
-        def splice_tree(full_tree, one_tree):
-            return jax.tree.map(
-                lambda f, o: splice(f, o) if f.ndim >= 1 and o.ndim == f.ndim
-                and f.shape[1:] == o.shape[1:] else f,
-                full_tree, one_tree)
+        Returns the logits of the true last prompt token, (1, 1, V), so the
+        caller can sample the request's first generated token immediately
+        (time-to-first-token is the prefill, not the next batch step).
+        """
+        if self.cache is None:
+            raise RuntimeError("insert() needs a live batch; call prefill() "
+                               "first")
+        S = tokens_1xS.shape[1]
+        true_len = S if true_len is None else int(true_len)
+        if not 0 < true_len <= S:
+            raise ValueError(f"true_len {true_len} outside (0, {S}]")
+        if not 0 <= slot < self.batch:
+            raise ValueError(f"slot {slot} outside [0, {self.batch})")
+        if self.cfg.family == "encdec":
+            if enc_embeds is None:
+                raise ValueError(
+                    "inserting into an encdec engine requires enc_embeds — "
+                    "the slot's encoder output must be spliced alongside its "
+                    "KV cache")
+            if self._enc_out is None:
+                raise RuntimeError("encdec insert() needs a live batch with "
+                                   "encoder output; call prefill() first")
+            if enc_embeds.shape[1] != self._enc_out.shape[1]:
+                raise ValueError(
+                    f"enc_embeds length {enc_embeds.shape[1]} != batch "
+                    f"encoder length {self._enc_out.shape[1]}")
+        logits, mini_cache, mini_enc = self._prefill(
+            self.params, self._fresh_b1(), tokens_1xS, None, enc_embeds,
+            true_len - 1)
+        self.cache, self._enc_out = self._splice(
+            self.cache, mini_cache, self._enc_out, mini_enc, slot, true_len)
+        return logits
 
-        # per-slot caches share every axis except batch; "len" is global —
-        # per-slot lengths are tracked host-side by the caller
-        new_groups = []
-        for gfull, gone in zip(self.cache["groups"], mini.cache["groups"]):
-            new_groups.append(jax.tree.map(
-                lambda f, o: _splice_batch(f, o, slot), gfull, gone))
-        new_tail = []
-        for tfull, tone in zip(self.cache["tail"], mini.cache["tail"]):
-            new_tail.append(jax.tree.map(
-                lambda f, o: _splice_batch(f, o, slot), tfull, tone))
-        self.cache = {"groups": new_groups, "tail": new_tail,
-                      "len": self.cache["len"]}
 
-
-def _splice_batch(full, one, slot: int):
+def _splice_batch(full, one, slot):
     """Insert ``one`` (batch=1 leaf) into ``full`` at batch index ``slot``.
     Cache leaves have batch as the first axis after the optional group axis."""
     if full.ndim == one.ndim and full.shape == one.shape:

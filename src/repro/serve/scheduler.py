@@ -1,0 +1,499 @@
+"""Request-level serving scheduler: the HyPar job model one level up.
+
+DESIGN.md §8.  The decode fleet maps onto the paper's runtime roles:
+
+* a *slot* of the batched :class:`~repro.serve.engine.Engine` is a worker —
+  its share of the KV cache is a device-local retained result
+  (``no_send_back``),
+* an admitted request is a *dynamic job*, spawned at runtime by a
+  ``control`` function (paper §3.3 — "each job can add a finite number of
+  new jobs"),
+* continuous batching (prefill-into-free-slot, decode the live batch,
+  retire finished slots) is the scheduler's select-and-assign loop,
+* losing a slot's KV (worker failure) invalidates the retained result; the
+  request is re-queued and re-prefilled — lineage recovery exactly as
+  DESIGN.md §6 applies to retained results.
+
+Two operating modes share every code path except placement:
+
+* **direct** — free slots are filled first-come-first-served,
+* **hypar** (:class:`HyParRequestTracker`) — each request goes through the
+  core machinery: a dynamic job added via :class:`ControlContext`, placed
+  by :class:`MasterScheduler` (``greedy`` or ``cost`` strategy, decode-time
+  EWMA fed back via ``observe``), its generated tokens recorded in
+  :class:`ResultStore` as a worker-retained result and released on
+  delivery.
+
+Host-side per-slot state (`SlotState`: position, remaining budget, stop
+status) mirrors the engine's per-slot cache lengths — the bookkeeping
+``Engine.insert`` used to promise but never implemented.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.job import ChunkedData, Job, JobGraph, ParallelSegment
+from repro.core.registry import ControlContext, FunctionKind, FunctionRegistry
+from repro.core.scheduler import (CostModelParams, MasterScheduler,
+                                  ResultStore, VirtualCluster)
+
+from .engine import Engine, SamplingParams
+
+__all__ = [
+    "Request", "RequestResult", "RequestQueue", "SlotState",
+    "ServeScheduler", "HyParRequestTracker", "DEFAULT_BUCKETS",
+]
+
+# prompt-length buckets: prompts are right-padded to the next bucket so the
+# slot-prefill program compiles once per bucket, not once per length
+DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
+
+
+# ---------------------------------------------------------------------------
+# Requests & results
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray              # (S,) int32 prompt
+    max_new: int
+    arrival_s: float = 0.0          # scheduler-clock arrival time
+    enc_embeds: Any = None          # encdec: (1, T, d) encoder input
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    prompt_len: int
+    tokens: list[int]               # generated ids (incl. the stop token)
+    arrival_s: float
+    token_s: list[float]            # completion time of each token
+    finish_s: float
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token, measured from arrival (queueing included)."""
+        return self.token_s[0] - self.arrival_s
+
+    @property
+    def step_latencies_s(self) -> list[float]:
+        """Inter-token latencies after the first token."""
+        return [b - a for a, b in zip(self.token_s, self.token_s[1:])]
+
+
+class RequestQueue:
+    """FIFO admission queue.  ``max_pending`` is the admission-control knob:
+    a full queue sheds the request (``submit`` returns False) instead of
+    growing without bound — the caller decides whether to retry."""
+
+    def __init__(self, max_pending: int | None = None):
+        self.max_pending = max_pending
+        self._q: deque[Request] = deque()
+        self._next_rid = 0
+        self.n_submitted = 0
+        self.n_rejected = 0
+
+    def next_rid(self) -> int:
+        rid, self._next_rid = self._next_rid, self._next_rid + 1
+        return rid
+
+    def submit(self, req: Request) -> bool:
+        if self.max_pending is not None and len(self._q) >= self.max_pending:
+            self.n_rejected += 1
+            return False
+        self._q.append(req)
+        self.n_submitted += 1
+        return True
+
+    def push_front(self, req: Request) -> None:
+        """Re-queue a request whose retained KV was lost (fault recovery);
+        it bypasses admission — the request was already admitted once."""
+        self._q.appendleft(req)
+
+    def pop(self) -> Request | None:
+        return self._q.popleft() if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+# ---------------------------------------------------------------------------
+# Per-slot host-side state
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Host-side mirror of one engine slot: position, remaining budget and
+    stop status — the per-slot bookkeeping the engine's per-slot cache
+    lengths are kept in sync with."""
+
+    slot: int
+    request: Request | None = None
+    pos: int = 0                    # tokens in the slot's cache
+    budget: int = 0                 # generated tokens still allowed
+    next_token: int = 0             # fed to the next decode step
+    finished: bool = False
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    token_s: list[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+
+# ---------------------------------------------------------------------------
+# HyPar integration
+# ---------------------------------------------------------------------------
+
+
+class HyParRequestTracker:
+    """Runs each admitted request through the core job machinery.
+
+    Slots are pre-spawned :class:`Worker`\\ s (wid == slot at start); a
+    request becomes a dynamic ``Job`` spawned by the registered
+    ``serve.admit`` *control* function, placed by :class:`MasterScheduler`
+    (so ``greedy``/``cost`` strategies pick the slot), its generated tokens
+    recorded as a ``no_send_back`` (worker-retained) result in
+    :class:`ResultStore` and released on delivery.  A failed slot loses its
+    retained results (``invalidate_worker``), its worker's cluster slot is
+    freed and a replacement is spawned — the serving instance of the
+    recovery contract of DESIGN.md §6.
+    """
+
+    ADMIT_FN = "serve.admit"
+    DECODE_FN = "serve.decode"
+
+    def __init__(self, n_slots: int, *, strategy: str = "greedy",
+                 cost_params: CostModelParams | None = None,
+                 devices: Sequence[Any] | None = None,
+                 flops_per_token: float = 0.0,
+                 registry: FunctionRegistry | None = None):
+        devices = list(devices if devices is not None else jax.devices())
+        self.n_slots = n_slots
+        self.cluster = VirtualCluster(devices, max_workers=n_slots)
+        for _ in range(n_slots):
+            self.cluster.spawn_worker()
+        self.graph = JobGraph([ParallelSegment([])])
+        self.store = ResultStore(self.cluster)
+        self.master = MasterScheduler(self.graph, self.cluster,
+                                      strategy=strategy,
+                                      cost_params=cost_params)
+        self.registry = registry or FunctionRegistry()
+        self.registry.register(self.ADMIT_FN, self._admit_control,
+                               kind=FunctionKind.CONTROL, name=self.ADMIT_FN)
+        self.flops_per_token = flops_per_token
+        self.slot_to_wid = {i: i for i in range(n_slots)}
+        self.wid_to_slot = {i: i for i in range(n_slots)}
+        self._job_of: dict[int, Job] = {}
+        self._pending_jobs: list[Job] = []
+        self.n_recovered = 0
+
+    # -- control function: dynamic job creation (paper §3.3) -------------------
+    def _admit_control(self, inputs: ChunkedData, ctx: ControlContext) -> ChunkedData:
+        for job in self._pending_jobs:
+            ctx.add_job(job, 0)     # current segment: decode starts now
+        self._pending_jobs = []
+        return inputs
+
+    # -- scheduler hooks -------------------------------------------------------
+    def place(self, req: Request, free_slots: Sequence[int]) -> int:
+        """Choose the slot for an admitted request via MasterScheduler."""
+        job = Job(name=f"req{req.rid}", fn=self.DECODE_FN, n_threads=1,
+                  no_send_back=True,
+                  cost_hint=self.flops_per_token * req.max_new)
+        self._pending_jobs = [job]
+        ctx = ControlContext(self.graph, current_segment=0)
+        self.registry[self.ADMIT_FN].fn(ChunkedData(), ctx)
+        for j, seg in ctx.added:
+            self.graph.add_dynamic(j, seg, current=0)
+
+        free = set(free_slots)
+        loads = {wid: (0 if slot in free else 1)
+                 for slot, wid in self.slot_to_wid.items()}
+        placement = self.master.plan_segment([job], self.store, loads=loads)[0]
+        slot = self.wid_to_slot.get(placement.worker.wid)
+        if slot not in free:
+            # master picked a busy or unmapped worker: fall back to the
+            # first free slot and keep ITS worker binding — rebinding the
+            # picked worker here would leave two slots mapped to one wid
+            # and a later fail() would invalidate the busy slot's results
+            slot = sorted(free)[0]
+        self._job_of[req.rid] = job
+        return slot
+
+    def finish(self, req: Request, slot: int, tokens: np.ndarray) -> None:
+        """Record the request's output as a worker-retained result."""
+        job = self._job_of[req.rid]
+        worker = self.cluster.workers[self.slot_to_wid[slot]]
+        self.store.put(job, ChunkedData.from_arrays([np.asarray(tokens)]),
+                       worker)
+        worker.jobs_done += 1
+
+    def retire(self, req: Request) -> None:
+        """Result delivered: release the retained data, GC the dynamic job."""
+        job = self._job_of.pop(req.rid, None)
+        if job is None:
+            return
+        self.store.release(job.name)
+        self.graph.remove_job(job.name)
+
+    def observe(self, step_s: float, n_live: int) -> None:
+        """Feed per-request decode-step time into the cost model's EWMA."""
+        if n_live > 0:
+            self.master.observe(self.DECODE_FN, step_s / n_live)
+
+    def fail(self, slot: int, *, rid: int | None = None) -> list[str]:
+        """Worker failure: retained results lost, cluster slot freed, a
+        replacement worker spawned and bound to the slot."""
+        wid = self.slot_to_wid[slot]
+        worker = self.cluster.workers[wid]
+        worker.fail()
+        lost = self.store.invalidate_worker(wid)
+        if rid is not None:
+            job = self._job_of.pop(rid, None)
+            if job is not None:     # in-flight job dies with its worker
+                self.graph.remove_job(job.name)
+        del self.wid_to_slot[wid]
+        repl = self.cluster.spawn_worker()
+        self.slot_to_wid[slot] = repl.wid
+        self.wid_to_slot[repl.wid] = slot
+        self.n_recovered += 1
+        return lost
+
+
+# ---------------------------------------------------------------------------
+# The scheduler
+# ---------------------------------------------------------------------------
+
+
+class ServeScheduler:
+    """Continuous-batching loop over an :class:`Engine`.
+
+    Slot lifecycle: a free slot pulls the next admitted request, prefills it
+    in place (``Engine.insert`` — compiled once per prompt bucket) and
+    samples its first token; every ``step()`` decodes the whole live batch
+    once; a slot whose request hit its budget or stop token is retired and
+    immediately refillable.  All request-visible timing (arrival, TTFT,
+    per-token) is measured on ``clock``.
+    """
+
+    def __init__(self, engine: Engine, *,
+                 sp: SamplingParams = SamplingParams(),
+                 queue: RequestQueue | None = None,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 tracker: HyParRequestTracker | None = None,
+                 key=None,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.engine = engine
+        self.sp = sp
+        self.queue = queue if queue is not None else RequestQueue()
+        # clamp oversized buckets to the cache size instead of dropping them:
+        # a prompt whose next bucket exceeds max_len may still fit the cache
+        # (prompt + budget <= max_len) and must stay placeable
+        self.buckets = tuple(sorted({min(b, engine.max_len) for b in buckets
+                                     if b > 0}))
+        if not self.buckets:
+            raise ValueError(f"no prompt bucket fits max_len={engine.max_len}")
+        self.tracker = tracker
+        self.clock = clock
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        self.slots = [SlotState(i) for i in range(engine.batch)]
+        self.results: list[RequestResult] = []
+        self.n_steps = 0
+        self.occupied_slot_steps = 0
+
+    # -- submission ------------------------------------------------------------
+    def submit(self, tokens, max_new: int, *, enc_embeds=None,
+               arrival_s: float | None = None) -> int | None:
+        """Admit one request.  Returns its rid, or None when shed — either
+        the queue is full, or the request can never fit the engine
+        (prompt bucket + budget vs ``max_len``)."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        req = Request(rid=self.queue.next_rid(), tokens=tokens,
+                      max_new=max_new, enc_embeds=enc_embeds,
+                      arrival_s=self.clock() if arrival_s is None
+                      else arrival_s)
+        if not self._fits(req):
+            self.queue.n_rejected += 1
+            return None
+        return req.rid if self.queue.submit(req) else None
+
+    def _fits(self, req: Request) -> bool:
+        """Can this request ever be placed: a prompt bucket exists and
+        prompt + budget stay inside the engine's cache."""
+        return (self._bucket_len(len(req.tokens)) is not None
+                and len(req.tokens) + req.max_new <= self.engine.max_len)
+
+    def _bucket_len(self, n: int) -> int | None:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return None
+
+    # -- slot lifecycle --------------------------------------------------------
+    def _sample(self, logits) -> np.ndarray:
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(Engine._sample(logits, sub, self.sp))
+
+    def _insert(self, req: Request, slot: int) -> None:
+        S = len(req.tokens)
+        bucket = self._bucket_len(S)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :S] = req.tokens
+        if self.engine.cfg.family == "encdec":
+            self.engine.ensure_batch(enc_len=req.enc_embeds.shape[1])
+        else:
+            self.engine.ensure_batch()
+        logits = self.engine.insert(slot, padded, true_len=S,
+                                    enc_embeds=req.enc_embeds)
+        tok = int(self._sample(logits)[0])
+        now = self.clock()
+        st = self.slots[slot]
+        st.request, st.pos, st.budget = req, S, req.max_new
+        st.tokens, st.token_s = [tok], [now]
+        st.next_token, st.finished = tok, False
+        st.pos += 1
+        st.budget -= 1
+        if st.budget <= 0 or (self.sp.stop_token >= 0
+                              and tok == self.sp.stop_token):
+            st.finished = True
+
+    def _fill_free_slots(self) -> None:
+        free = [s.slot for s in self.slots if s.free]
+        while free and len(self.queue):
+            req = self.queue.pop()
+            if not self._fits(req):      # raw queue.submit bypassed admission
+                self.queue.n_rejected += 1
+                continue
+            if self.tracker is not None:
+                slot = self.tracker.place(req, free)
+            else:
+                slot = free[0]
+            free.remove(slot)
+            self._insert(req, slot)
+
+    def _retire_finished(self) -> None:
+        now = self.clock()
+        for st in self.slots:
+            if st.request is None or not st.finished:
+                continue
+            req = st.request
+            res = RequestResult(rid=req.rid, prompt_len=len(req.tokens),
+                                tokens=list(st.tokens),
+                                arrival_s=req.arrival_s,
+                                token_s=list(st.token_s), finish_s=now)
+            self.results.append(res)
+            if self.tracker is not None:
+                self.tracker.finish(req, st.slot, np.asarray(st.tokens))
+                self.tracker.retire(req)
+            st.request = None
+            st.finished = False
+
+    def fail_slot(self, slot: int) -> int | None:
+        """Simulate losing a slot's device-local KV (worker failure).  The
+        in-flight request restarts from its prompt (the retained cache is
+        gone — there is nothing to resume from); returns its rid."""
+        st = self.slots[slot]
+        req, rid = st.request, (st.request.rid if st.request else None)
+        if self.tracker is not None:
+            self.tracker.fail(slot, rid=rid)
+        if req is not None:
+            st.request, st.finished = None, False
+            st.tokens, st.token_s = [], []
+            self.queue.push_front(req)
+        return rid
+
+    # -- the loop --------------------------------------------------------------
+    def step(self) -> bool:
+        """Fill free slots, run one decode step over the live batch, retire
+        finished requests.  Returns False when nothing is in flight."""
+        self._fill_free_slots()
+        self._retire_finished()          # budget-1 requests end at prefill
+        live = [s for s in self.slots if s.request is not None]
+        if not live:
+            return False
+        t0 = self.clock()
+        tokens = np.zeros((self.engine.batch, 1), np.int32)
+        for st in live:
+            tokens[st.slot, 0] = st.next_token
+        ids = self._sample(self.engine.decode(tokens))
+        now = self.clock()
+        self.n_steps += 1
+        self.occupied_slot_steps += len(live)
+        if self.tracker is not None:
+            self.tracker.observe(now - t0, len(live))
+        for st in live:
+            tok = int(ids[st.slot])
+            st.tokens.append(tok)
+            st.token_s.append(now)
+            st.next_token = tok
+            st.pos += 1
+            st.budget -= 1
+            if st.budget <= 0 or (self.sp.stop_token >= 0
+                                  and tok == self.sp.stop_token):
+                st.finished = True
+        self._retire_finished()
+        return True
+
+    def run(self, requests: Iterable[Request] | None = None,
+            ) -> list[RequestResult]:
+        """Drive to completion.  Without ``requests``, drains whatever is in
+        the queue.  With ``requests`` (relative ``arrival_s`` stamps), does a
+        timed open-loop replay: each request is submitted once the wall
+        clock passes its arrival offset — the Poisson-trace mode of
+        ``launch/serve.py``."""
+        pending: deque[Request] = deque()
+        if requests is not None:
+            pending.extend(sorted(requests, key=lambda r: r.arrival_s))
+        t0 = self.clock()
+        while True:
+            now = self.clock() - t0
+            while pending and pending[0].arrival_s <= now:
+                req = pending.popleft()
+                req.arrival_s += t0      # rebase onto the scheduler clock
+                if self._fits(req):      # same admission as submit()
+                    self.queue.submit(req)
+                else:
+                    self.queue.n_rejected += 1
+            if not self.step():
+                if pending:
+                    time.sleep(min(max(pending[0].arrival_s - now, 0.0),
+                                   0.005))
+                    continue
+                if len(self.queue) == 0:
+                    break
+        return self.results
+
+    def reset_metrics(self) -> None:
+        """Clear results and counters after a warmup pass so a measured run
+        on the SAME scheduler (and therefore the same compiled engine
+        programs) starts from clean figures.  Slots must be drained first."""
+        if any(not s.free for s in self.slots) or len(self.queue):
+            raise RuntimeError("reset_metrics() with requests still in "
+                               "flight")
+        self.results = []
+        self.n_steps = 0
+        self.occupied_slot_steps = 0
+        self.queue.n_submitted = 0
+        self.queue.n_rejected = 0
+
+    # -- metrics ---------------------------------------------------------------
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slots doing useful work per decode step."""
+        if self.n_steps == 0:
+            return 0.0
+        return self.occupied_slot_steps / (self.n_steps * self.engine.batch)

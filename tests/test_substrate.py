@@ -165,6 +165,49 @@ def test_async_checkpointer_and_gc(tmp_path):
     assert steps == ["step_000000002", "step_000000003"]
 
 
+def test_async_checkpointer_gc_keep_zero_deletes_all(tmp_path):
+    """keep=0 means retain nothing: steps[:-0] sliced to [] and silently
+    kept everything instead."""
+    ck = AsyncCheckpointer(str(tmp_path), keep=0)
+    tree = _tree(jax.random.PRNGKey(5))
+    for s in (1, 2):
+        ck.save(tree, s)
+    ck.wait()
+    assert [d for d in os.listdir(tmp_path) if d.startswith("step_")] == []
+
+
+def test_async_checkpointer_gc_retains_all_when_under_keep(tmp_path):
+    """Fewer checkpoints than ``keep`` must all survive (a negative slice
+    stop would wrap around and delete the oldest)."""
+    ck = AsyncCheckpointer(str(tmp_path), keep=3)
+    tree = _tree(jax.random.PRNGKey(7))
+    for s in (1, 2):
+        ck.save(tree, s)
+    ck.wait()
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_000000001", "step_000000002"]
+
+
+def test_latest_step_falls_back_to_scanning_step_dirs(tmp_path):
+    """A crash between the step-dir rename and the LATEST update leaves an
+    empty/corrupt pointer; the restore path must scan instead of raising."""
+    tree = _tree(jax.random.PRNGKey(6))
+    save_checkpoint(str(tmp_path), tree, 3)
+    save_checkpoint(str(tmp_path), tree, 7)
+    (tmp_path / "LATEST").write_text("")            # crashed mid-write
+    assert latest_step(str(tmp_path)) == 7
+    (tmp_path / "LATEST").write_text("not-a-step")  # corrupt
+    assert latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    _, step = restore_checkpoint(str(tmp_path), like)
+    assert step == 7
+    # no pointer and no step dirs at all -> still None, not an exception
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    (empty / "LATEST").write_text("")
+    assert latest_step(str(empty)) is None
+
+
 def test_checkpoint_elastic_restore_resharded(tmp_path):
     """Restore with a sharding_fn onto the (single-device) 'new mesh'."""
     tree = _tree(jax.random.PRNGKey(4))

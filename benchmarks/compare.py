@@ -1,0 +1,88 @@
+"""Diff two ``BENCH_<suite>.json`` files: per-row median deltas.
+
+    python -m benchmarks.compare BASELINE.json NEW.json [--threshold 10]
+
+Rows are matched by ``name``; for each match the median_s delta is printed
+(positive = NEW is slower).  Exits non-zero when any row regresses by more
+than ``--threshold`` percent — CI runs this informationally against the
+committed baselines after the benchmark-smoke step, so a hot-path
+regression shows up in the log the moment a PR introduces it, without
+hard-failing on machine noise (`|| true` in the workflow).
+
+Rows present in only one file are reported but never fail the diff: suites
+legitimately gain rows (new workloads) and, rarely, retire them.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    if "rows" not in doc:
+        raise SystemExit(f"{path}: not a BENCH file (no 'rows')")
+    return {r["name"]: r for r in doc["rows"]}
+
+
+def compare(base: dict[str, dict], new: dict[str, dict],
+            threshold_pct: float) -> tuple[list[str], int]:
+    lines, n_regressed = [], 0
+    for name in sorted(base.keys() | new.keys()):
+        b, n = base.get(name), new.get(name)
+        if b is None:
+            lines.append(f"  {name:>28}: (new row) "
+                         f"median {n['median_s'] * 1e6:10.1f} us")
+            continue
+        if n is None:
+            lines.append(f"  {name:>28}: (row removed)")
+            continue
+        if not b["median_s"] or b["median_s"] != b["median_s"]:  # 0 or NaN
+            lines.append(f"  {name:>28}: baseline median unusable, skipped")
+            continue
+        if n["median_s"] != n["median_s"]:                       # NaN
+            # a broken run records NaN medians (see run_trace) — that is
+            # the worst regression, not a pass
+            lines.append(f"  {name:>28}: NEW median is NaN  <-- REGRESSION "
+                         f"(broken run)")
+            n_regressed += 1
+            continue
+        delta = (n["median_s"] / b["median_s"] - 1.0) * 100.0
+        flag = ""
+        if delta > threshold_pct:
+            flag = f"  <-- REGRESSION (> {threshold_pct:g}%)"
+            n_regressed += 1
+        elif delta < -threshold_pct:
+            flag = "  (improved)"
+        lines.append(f"  {name:>28}: {b['median_s'] * 1e6:10.1f} -> "
+                     f"{n['median_s'] * 1e6:10.1f} us  {delta:+7.1f}%{flag}")
+    return lines, n_regressed
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.compare",
+                                 description=__doc__)
+    ap.add_argument("baseline", help="BENCH_<suite>.json to compare against")
+    ap.add_argument("new", help="freshly generated BENCH_<suite>.json")
+    ap.add_argument("--threshold", type=float, default=10.0,
+                    help="median_s regression tolerance, percent "
+                         "(default 10)")
+    args = ap.parse_args(argv)
+
+    base, new = load_rows(args.baseline), load_rows(args.new)
+    lines, n_regressed = compare(base, new, args.threshold)
+    print(f"== {args.baseline} vs {args.new} "
+          f"(threshold {args.threshold:g}%) ==")
+    for line in lines:
+        print(line)
+    if n_regressed:
+        print(f"{n_regressed} row(s) regressed beyond {args.threshold:g}%")
+        return 1
+    print("no regression beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -318,6 +318,15 @@ class MasterScheduler:
 
     def plan_segment(self, segment_jobs: Sequence[Job], store: ResultStore,
                      *, loads: Mapping[int, int] | None = None) -> list[Placement]:
+        """Plan placements for every job of one parallel segment.
+
+        This call is batched by design — callers should hand it ALL the jobs
+        that become ready together (a whole segment, or a serving admission
+        wave — see ``repro.serve.scheduler.HyParRequestTracker.place_batch``)
+        rather than loop over singletons: one call amortises the ordering /
+        co-scheduling bookkeeping and lets locality and load terms see the
+        whole wave at once.
+        """
         loads = dict(loads or {})
         placements: list[Placement] = []
         # deterministic order: jobs sorted by (fn, name) so same-fn jobs are
@@ -326,7 +335,11 @@ class MasterScheduler:
         cohab: dict[int, list[Placement]] = {}   # wid -> placements sharing it
 
         for job in order:
-            by_loc = self._input_bytes_by_location(job, store)
+            # input-less jobs (serving admissions, source jobs) skip the
+            # result-directory walk entirely — on a hot admission path this
+            # is one dict scan per job per wave
+            by_loc = (self._input_bytes_by_location(job, store)
+                      if job.inputs else {})
             total_in = sum(by_loc.values())
 
             # try co-scheduling with an already-placed same-fn job

@@ -13,7 +13,9 @@ Two modes:
   control, prefill-into-free-slot / decode-live-batch / retire lifecycle.
   ``--engine hypar`` routes every request through the core job machinery
   (dynamic control-spawned jobs, MasterScheduler placement, ResultStore
-  retention) — see DESIGN.md §8.
+  retention) — see DESIGN.md §8.  ``--paged`` swaps the dense per-slot KV
+  cache for the paged pool + chunked-prefill path (admission by free pages,
+  long prompts interleaved with decode steps) — see DESIGN.md §9.
 
 Examples::
 
@@ -21,10 +23,13 @@ Examples::
         --batch 4 --prompt-len 32 --max-new 32
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --trace --engine hypar --n-requests 32 --rate 64
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --trace --paged --prefill-chunk 32 --prompt-lens 8 16 96
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -32,8 +37,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config, get_smoke_config
-from repro.serve import (Engine, HyParRequestTracker, Request, RequestQueue,
-                         SamplingParams, ServeScheduler, count_generated)
+from repro.serve import (Engine, HyParRequestTracker, PagedEngine, Request,
+                         RequestQueue, SamplingParams, ServeScheduler,
+                         count_generated)
 
 
 def build_trace(rng: np.random.Generator, cfg, *, n_requests: int,
@@ -74,7 +80,13 @@ def warmup_requests(rng: np.random.Generator, cfg, *, prompt_lens,
 
 def make_scheduler(cfg, params, args, *, sp: SamplingParams,
                    max_len: int) -> ServeScheduler:
-    eng = Engine(cfg, params, batch=args.batch, max_len=max_len)
+    if getattr(args, "paged", False):
+        eng = PagedEngine(cfg, params, batch=args.batch, max_len=max_len,
+                          page_size=args.page_size,
+                          num_pages=args.num_pages,
+                          prefill_chunk=args.prefill_chunk)
+    else:
+        eng = Engine(cfg, params, batch=args.batch, max_len=max_len)
     tracker = None
     if args.engine == "hypar":
         n_params = sum(x.size for x in jax.tree.leaves(params))
@@ -86,24 +98,57 @@ def make_scheduler(cfg, params, args, *, sp: SamplingParams,
                           queue=RequestQueue(max_pending=args.max_pending))
 
 
-def run_trace(cfg, params, args, *, sp: SamplingParams) -> dict:
+def prepare_trace(cfg, params, args, *, sp: SamplingParams):
+    """Build a warmed scheduler + the request trace for it.
+
+    Warmup runs on the SAME scheduler: Engine jit caches are per-instance,
+    so a throwaway warmup engine would leave the measured replays to pay
+    every prefill/decode/splice compilation they claim to have excluded.
+    """
     max_len = max(args.prompt_lens) + args.max_new + 8
     rng = np.random.default_rng(args.seed)
-
-    # warmup on the SAME scheduler: Engine jit caches are per-instance, so
-    # a throwaway warmup engine would leave the measured run to pay every
-    # prefill/decode/splice compilation it claims to have excluded
     sched = make_scheduler(cfg, params, args, sp=sp, max_len=max_len)
     sched.run(warmup_requests(rng, cfg, prompt_lens=args.prompt_lens))
     sched.reset_metrics()
-
     reqs = build_trace(rng, cfg, n_requests=args.n_requests,
                        rate_per_s=args.rate, prompt_lens=list(args.prompt_lens),
                        max_new=args.max_new)
-    t0 = time.perf_counter()
-    results = sched.run(reqs)
-    wall = time.perf_counter() - t0
+    return sched, reqs
 
+
+def replay_trace(sched, reqs) -> tuple:
+    """One measured replay of ``reqs`` on a warmed scheduler.  Returns a
+    ``(tok_per_s, results, wall, occupancy, n_rejected)`` snapshot and
+    resets the scheduler's metrics for the next replay.  (``run()`` rebases
+    each request's arrival onto the live clock, so every replay gets fresh
+    Request copies.)"""
+    replay = [dataclasses.replace(r) for r in reqs]
+    t0 = time.perf_counter()
+    results = sched.run(replay)
+    wall = time.perf_counter() - t0
+    rate = sum(r.n_generated for r in results) / wall if wall > 0 else 0.0
+    snap = (rate, results, wall, sched.occupancy, sched.queue.n_rejected)
+    sched.reset_metrics()              # also clears occupancy + counters
+    return snap
+
+
+def run_trace(cfg, params, args, *, sp: SamplingParams,
+              repeats: int = 1) -> dict:
+    sched, reqs = prepare_trace(cfg, params, args, sp=sp)
+    # ``repeats``: replay the SAME trace N times on the warmed scheduler and
+    # keep the fastest replay — the serve benchmark's noise floor on shared
+    # CI/CPU boxes is far above the engine differences it wants to resolve,
+    # and best-of-N is the same discipline kernel_bench applies per-op.
+    # (benchmarks/serve_bench.py goes further and ROUND-ROBINS the replays
+    # of the engines it compares, so minute-scale machine drift cannot land
+    # entirely on one engine's measurements.)
+    snaps = [replay_trace(sched, reqs) for _ in range(max(1, repeats))]
+    return trace_stats(args, sched, max(snaps, key=lambda s: s[0]))
+
+
+def trace_stats(args, sched, snap) -> dict:
+    """Build the stats dict from the best replay snapshot."""
+    _, results, wall, occupancy, n_rejected = snap
     n_tok = sum(r.n_generated for r in results)
     # NaN, not 0.0, when nothing completed: a broken/all-shed run must not
     # record perfect-looking latencies into the BENCH trajectory
@@ -112,10 +157,18 @@ def run_trace(cfg, params, args, *, sp: SamplingParams) -> dict:
     lats = (np.array([l for r in results for l in r.step_latencies_s])
             if any(r.step_latencies_s for r in results)
             else np.array([np.nan]))
+    eng = sched.engine
+    trace_counts = ({"chunk_prefill": eng.trace_count("chunk_prefill"),
+                     "decode": eng.trace_count("decode")}
+                    if sched.paged else
+                    {"prefill": eng.trace_count("prefill"),
+                     "decode": eng.trace_count("decode"),
+                     "splice": eng.trace_count("splice")})
     stats = {
         "engine": args.engine,
+        "paged": sched.paged,
         "n_requests": len(results),
-        "n_rejected": sched.queue.n_rejected,
+        "n_rejected": n_rejected,
         "gen_tokens": n_tok,
         "wall_s": wall,
         "tok_per_s": n_tok / wall if wall > 0 else 0.0,
@@ -123,7 +176,8 @@ def run_trace(cfg, params, args, *, sp: SamplingParams) -> dict:
         "ttft_p95_s": float(np.percentile(ttfts, 95)),
         "lat_p50_s": float(np.percentile(lats, 50)),
         "lat_p95_s": float(np.percentile(lats, 95)),
-        "occupancy": sched.occupancy,
+        "occupancy": occupancy,
+        "trace_counts": trace_counts,
     }
     return stats
 
@@ -195,7 +249,21 @@ def main(argv=None):
                     help="trace mode: mixed prompt lengths")
     ap.add_argument("--max-pending", type=int, default=None,
                     help="admission control: shed beyond this queue depth")
+    # paged KV + chunked prefill (trace mode)
+    ap.add_argument("--paged", action="store_true",
+                    help="trace mode: paged KV cache + chunked prefill "
+                         "(admission by free pages)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged: tokens per KV page")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="paged: pool size incl. the trash page (default: "
+                         "the dense engine's batch x max_len footprint)")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="paged: prompt chunk length interleaved with "
+                         "decode steps (multiple of --page-size)")
     args = ap.parse_args(argv)
+    if args.paged and not args.trace:
+        ap.error("--paged requires --trace (wave mode is dense-only)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     from repro.models.transformer import init_params
@@ -204,8 +272,11 @@ def main(argv=None):
 
     if args.trace:
         stats = run_trace(cfg, params, args, sp=sp)
-        print(f"engine={stats['engine']} requests={stats['n_requests']} "
-              f"(+{stats['n_rejected']} shed) tokens={stats['gen_tokens']}")
+        kind = "paged" if stats["paged"] else "dense"
+        print(f"engine={stats['engine']} ({kind}) "
+              f"requests={stats['n_requests']} "
+              f"(+{stats['n_rejected']} shed) tokens={stats['gen_tokens']} "
+              f"traces={stats['trace_counts']}")
         print(f"tok/s={stats['tok_per_s']:.1f} "
               f"ttft p50={stats['ttft_p50_s']*1e3:.1f}ms "
               f"p95={stats['ttft_p95_s']*1e3:.1f}ms "

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 from .config import ModelConfig
 from .layers import apply_norm, apply_rope, dense, init_dense, init_norm, rope_freqs
 
-__all__ = ["init_attention", "attention", "decode_attention", "KVCache"]
+__all__ = ["init_attention", "attention", "decode_attention", "KVCache",
+           "gather_pages"]
 
 NEG_INF = -2.3819763e38  # large negative for bf16-safe masking
 
@@ -150,6 +151,93 @@ def _tiled_attn(q, k, v, q_pos, k_pos, *, causal, window,
     return out.astype(q.dtype)
 
 
+def gather_pages(pool, page_table):
+    """Assemble per-slot contiguous KV views from a shared page pool.
+
+    pool: (P, KV, page_size, D) — one physical page pool for one layer — or
+    (G, P, KV, page_size, D) group-stacked (ONE gather covers all scanned
+    layers of a pattern: the gather runs outside the layer scan, not once
+    per iteration); page_table: (B, n_pages) int32 — logical page i of slot
+    b lives in physical page ``page_table[b, i]``.  Returns
+    ([G,] B, KV, n_pages*page_size, D), the same layout dense caches use, so
+    every attention path downstream is layout-agnostic.  The gather
+    materialises the view (the TPU kernel route would index pages inside the
+    kernel instead); positions past a slot's ``kv_len`` may contain stale
+    data from freed pages — they are masked to NEG_INF before the softmax
+    exactly like the zero tail of a dense cache, so results are unaffected.
+    """
+    if pool.ndim == 5:
+        g = pool[:, page_table]                  # (G, B, n, KV, ps, D)
+        G, B, n, KV, ps, D = g.shape
+        return g.transpose(0, 1, 3, 2, 4, 5).reshape(G, B, KV, n * ps, D)
+    g = pool[page_table]                         # (B, n, KV, ps, D)
+    B, n, KV, ps, D = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(B, KV, n * ps, D)
+
+
+def _chunk_attn_with_cache(q, k_cache, v_cache, start, kt, vt, *,
+                           window: int | None = None):
+    """Chunked-prefill attention: a prompt chunk at positions
+    ``start .. start+C-1`` attends over the already-written cache entries
+    (positions < start) plus itself (causal within the chunk) — the S>1
+    generalisation of ``_decode_attn_plus_self``.  The chunk's own K/V enter
+    through a separate score block so the cache write stays a pure delta.
+
+    q: (B, C, H, D); k_cache/v_cache: (B, KV, T, D) views (dense buffers or
+    gathered pages); kt/vt: (B, KV, C, D).  Scores are materialised
+    (C × (T+C)) — chunks are short by construction, so this never
+    approaches the S×S blow-up the tiled path exists to avoid.
+
+    The FIRST chunk of every prompt has ``start == 0`` — nothing in the
+    cache to read — so the whole C×T cache-score block is skipped behind a
+    ``lax.cond``: measured on CPU it is the dominant cost of a chunk call
+    (the view is worst-case wide), and most calls are first chunks (every
+    short prompt is a single chunk).
+    """
+    B, C, H, D = q.shape
+    KV, T = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    if k_cache.dtype != q.dtype:   # f8-stored caches: cast the layer slice
+        k_cache = k_cache.astype(q.dtype)
+        v_cache = v_cache.astype(q.dtype)
+        kt = kt.astype(q.dtype)
+        vt = vt.astype(q.dtype)
+    scale = 1.0 / math.sqrt(D)
+    qf = (q.reshape(B, C, KV, G, D) * scale).astype(q.dtype)
+    q_pos = start + jnp.arange(C)                                  # (C,)
+    rel = q_pos[:, None] - q_pos[None, :]                          # (C, C)
+    valid_self = rel >= 0
+    if window is not None:
+        valid_self = valid_self & (rel < window)
+
+    def with_cache(_):
+        t_pos = jnp.arange(T)
+        s_old = jnp.einsum("bckgd,bktd->bkgct", qf, k_cache,
+                           preferred_element_type=jnp.float32)
+        valid_old = t_pos[None, :] < start                         # (1, T)
+        if window is not None:
+            valid_old = valid_old & (q_pos[:, None] - t_pos[None, :] < window)
+        s_old = jnp.where(valid_old[None, None, None], s_old, NEG_INF)
+        s_self = jnp.einsum("bckgd,bksd->bkgcs", qf, kt,
+                            preferred_element_type=jnp.float32)
+        s_self = jnp.where(valid_self[None, None, None], s_self, NEG_INF)
+        s = jnp.concatenate([s_old, s_self], axis=-1)              # (.., T+C)
+        w = jax.nn.softmax(s, axis=-1)
+        w_old, w_self = w[..., :T], w[..., T:]
+        out = jnp.einsum("bkgct,bktd->bckgd", w_old.astype(v_cache.dtype),
+                         v_cache, preferred_element_type=jnp.float32)
+        out = out + jnp.einsum("bkgcs,bksd->bckgd", w_self.astype(vt.dtype),
+                               vt, preferred_element_type=jnp.float32)
+        return out.reshape(B, C, H, D).astype(q.dtype)
+
+    def first_chunk(_):
+        return _dense_attn(q, kt.swapaxes(1, 2), vt.swapaxes(1, 2),
+                           q_pos, q_pos, causal=True, window=window)
+
+    return jax.lax.cond(jnp.asarray(start) > 0, with_cache, first_chunk,
+                        None)
+
+
 def decode_attention(q, k_cache, v_cache, kv_len, *, window: int | None = None):
     """One-token attention against a (possibly sequence-sharded) KV cache.
 
@@ -245,12 +333,18 @@ def attention(cfg: ModelConfig, p: dict, x, *, positions, kv_x=None,
               kv_positions=None, causal: bool = True,
               window: int | None = None, cache: dict | None = None,
               cache_len=None, impl: str = "auto",
-              rope: bool | None = None) -> tuple[jax.Array, dict | None]:
+              rope: bool | None = None,
+              chunk_continue: bool = False) -> tuple[jax.Array, dict | None]:
     """Full attention layer: qkv proj -> rope -> core -> out proj.
 
     ``cache``/``cache_len``: decode mode — x is (B, 1, d); K/V for the new
     token are written at ``cache_len`` and attention runs against the cache.
     ``kv_x``: cross-attention (whisper decoder) — keys/values from encoder.
+    ``chunk_continue``: S > 1 with a *live* cache — chunked prefill: the
+    chunk attends over prior cache entries (< ``cache_len``) plus itself.
+    Paged caches never reach this layer: the serving engine gathers per-slot
+    views (``gather_pages``) into the dense (B, KV, T, D) layout before the
+    block runs, so reads here are layout-agnostic and writes stay deltas.
     """
     cd = jnp.dtype(cfg.compute_dtype)
     B, S, _ = x.shape
@@ -296,6 +390,10 @@ def attention(cfg: ModelConfig, p: dict, x, *, positions, kv_x=None,
                 out = _decode_attn_plus_self(
                     q, cache["k"], cache["v"], jnp.asarray(cache_len),
                     kt, vt, window=window)
+            elif chunk_continue:
+                out = _chunk_attn_with_cache(
+                    q, cache["k"], cache["v"], jnp.asarray(cache_len), kt, vt,
+                    window=window)
             else:
                 # batched prefill: attend over the freshly computed local
                 # K/V (the cache holds exactly these entries when starting

@@ -151,36 +151,65 @@ def ssd_chunked(xh, dt, A, Bm, Cm, *, chunk: int, initial_state=None,
     return y
 
 
-def _causal_conv(x, w, b):
-    """x: (B, S, C); w: (W, C); causal depthwise conv."""
+def _causal_conv(x, w, b, hist=None):
+    """x: (B, S, C); w: (W, C); causal depthwise conv.  ``hist``:
+    (B, W-1, C) left context (a previous chunk's raw-conv tail) instead of
+    the default zero padding — chunked prefill continues seamlessly through
+    the same arithmetic as the zero-padded one-shot path."""
     W = w.shape[0]
-    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    if hist is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([hist, x], axis=1)
     out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
     return out + b[None, None, :]
 
 
 def apply_mamba2(cfg: ModelConfig, p: dict, x: jax.Array, *,
                  initial_state=None, return_state: bool = False,
-                 return_cache: bool = False, impl: str = "auto"):
+                 return_cache: bool = False, cache: dict | None = None,
+                 valid_len=None, impl: str = "auto"):
     """Full Mamba-2 mixer. x: (B,S,d) -> (B,S,d).
 
     ``return_cache``: also return a decode cache (conv tail + final SSD
-    state) so a serving engine can continue token-by-token (prefill)."""
+    state) so a serving engine can continue token-by-token (prefill).
+    ``cache``: *continue* a prefill from a prior chunk's decode cache — the
+    causal conv reads the cached ``conv`` tail as left context and the SSD
+    scan starts from the cached ``state`` (chunked prefill, DESIGN.md §9).
+    ``valid_len``: scalar — positions ≥ ``valid_len`` are right-padding
+    (bucketed prompts): their ``dt`` is forced to 0 so they decay nothing
+    into the state (decay = 1, input = 0), and the returned conv tail is
+    sliced at the *true* end, so padding can never leak into decode.
+    """
     cd = jnp.dtype(cfg.compute_dtype)
     B, S, d = x.shape
     di, N, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads
     P = cfg.ssm_head_dim
+    W = cfg.ssm_conv
     if impl == "auto":
         impl = "kernel" if jax.default_backend() == "tpu" else "jnp"
 
     proj = dense(p["in_proj"], x, cd)
     z, xBC_raw, dt = jnp.split(proj, [di, 2 * di + 2 * N], axis=-1)
-    xBC = _causal_conv(xBC_raw.astype(jnp.float32), p["conv_w"].astype(jnp.float32),
-                       p["conv_b"].astype(jnp.float32))
+    xBC_f32 = xBC_raw.astype(jnp.float32)
+    if cache is not None:
+        # the previous chunk's raw-conv tail is the left context
+        hist = cache["conv"].astype(jnp.float32)                # (B, W-1, C)
+        if initial_state is None:
+            initial_state = cache["state"]
+    else:
+        hist = jnp.zeros((B, W - 1, xBC_f32.shape[-1]), jnp.float32)
+    xBC_full = jnp.concatenate([hist, xBC_f32], axis=1)
+    xBC = _causal_conv(xBC_f32, p["conv_w"].astype(jnp.float32),
+                       p["conv_b"].astype(jnp.float32), hist=hist)
     xBC = jax.nn.silu(xBC).astype(cd)
     xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
 
     dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    if valid_len is not None:
+        # padding steps must not touch the state: dt = 0 ⇒ decay 1, input 0
+        real = jnp.arange(S)[None, :, None] < valid_len
+        dtf = jnp.where(real, dtf, 0.0)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
 
     xh = xs.reshape(B, S, H, P)
@@ -192,9 +221,14 @@ def apply_mamba2(cfg: ModelConfig, p: dict, x: jax.Array, *,
     y = apply_norm(cfg, p["norm"], y * jax.nn.silu(z))
     out = dense(p["out_proj"], y, cd)
     if return_cache:
-        W = cfg.ssm_conv
-        assert S >= W - 1, f"prefill length {S} < conv window {W - 1}"
-        tail = xBC_raw.astype(jnp.float32)[:, S - (W - 1):S, :]
+        if valid_len is None:
+            assert S >= W - 1, f"prefill length {S} < conv window {W - 1}"
+            tail = xBC_f32[:, S - (W - 1):S, :]
+        else:
+            # xBC_full row i corresponds to position i - (W-1); the last
+            # W-1 *real* inputs are rows [valid_len, valid_len + W - 1)
+            tail = jax.lax.dynamic_slice_in_dim(xBC_full, valid_len, W - 1,
+                                                axis=1)
         return out, {"conv": tail, "state": fstate}
     if return_state:
         return out, fstate

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.parallel.sharding import current_rules, logical
-from .attention import KVCache, attention, init_attention
+from .attention import KVCache, attention, gather_pages, init_attention
 from .config import ModelConfig
 from .layers import (apply_mlp, apply_norm, embed, init_embedding, init_mlp,
                      init_norm, truncated_normal, unembed)
@@ -37,7 +37,8 @@ from .ssm import SSMCache, apply_mamba2, init_mamba2, mamba2_decode_step
 
 __all__ = [
     "layer_plan", "init_params", "forward", "loss_fn", "init_cache",
-    "prefill", "decode_step", "param_count",
+    "init_paged_cache", "prefill", "decode_step", "chunk_prefill_step",
+    "param_count",
 ]
 
 
@@ -116,8 +117,18 @@ def _window_for(cfg: ModelConfig, kind: str) -> int | None:
 
 def apply_block(cfg: ModelConfig, kind: str, p: dict, x, *, positions,
                 enc_out=None, cache=None, cache_len=None,
-                impl: str = "auto"):
-    """Returns (x, new_cache, aux_loss)."""
+                impl: str = "auto",
+                chunk_continue: bool = False, valid_len=None):
+    """Returns (x, new_cache, aux_loss).
+
+    ``chunk_continue``: S > 1 against a LIVE cache — chunked prefill: the
+    block continues from the cache (attention over prior entries + itself;
+    SSM from the cached conv tail + state) instead of starting fresh.
+    ``valid_len``: true (unpadded) length of a bucketed prompt chunk.
+    Paged serving engines pass attention caches as pre-gathered per-slot
+    VIEWS in the dense layout (see ``decode_step``) — this function never
+    sees a page table.
+    """
     aux = jnp.zeros((), jnp.float32)
     new_cache = cache
 
@@ -125,9 +136,16 @@ def apply_block(cfg: ModelConfig, kind: str, p: dict, x, *, positions,
         h = apply_norm(cfg, p["ln1"], x)
         if cache is not None and x.shape[1] == 1:
             out, new_cache = mamba2_decode_step(cfg, p["mixer"], h, cache)
+        elif cache is not None and chunk_continue:
+            # chunked prefill: continue the conv + SSD scan from the cache
+            out, new_cache = apply_mamba2(cfg, p["mixer"], h, cache=cache,
+                                          valid_len=valid_len,
+                                          return_cache=True)
         elif cache is not None:
             # batched prefill: run the chunked scan, emit a decode cache
-            out, new_cache = apply_mamba2(cfg, p["mixer"], h, return_cache=True)
+            out, new_cache = apply_mamba2(cfg, p["mixer"], h,
+                                          valid_len=valid_len,
+                                          return_cache=True)
         else:
             out = apply_mamba2(cfg, p["mixer"], h)
         return x + out, new_cache, aux
@@ -139,6 +157,7 @@ def apply_block(cfg: ModelConfig, kind: str, p: dict, x, *, positions,
     out, new_sa = attention(cfg, p["attn"], h, positions=positions,
                             causal=causal, window=window, cache=sa_cache,
                             cache_len=cache_len, impl=impl,
+                            chunk_continue=chunk_continue,
                             rope=cfg.use_rope and kind != "enc" and kind != "dec")
     x = x + logical(out, "batch", "seq", "embed")
 
@@ -376,41 +395,114 @@ def _write_kv(buf, delta, pos, *, batch_axis: int):
                     out_axes=batch_axis)(buf, delta, idx)
 
 
-def _apply_cache_update(old_layer_cache, upd, pos):
+def _write_kv_paged(pool, delta, pos, pages, page_size, *, stacked: bool):
+    """Scatter one decode step's K/V delta into a shared page pool.
+
+    pool: (G, P, KV, ps, D) stacked or (P, KV, ps, D) unstacked; delta the
+    matching (…, B, KV, 1, D); pos (B,) per-slot token positions; pages
+    (B, n_pages) page table.  Logical position ``pos`` of slot ``b`` lives
+    in physical page ``pages[b, pos // ps]`` at offset ``pos % ps``.  Slots
+    never share pages (allocator invariant), so the scatter indices are
+    unique across live slots; free slots all map to the reserved trash page,
+    whose contents are never validly read.
+    """
+    pos = jnp.broadcast_to(jnp.asarray(pos), (pages.shape[0],))
+    B = pages.shape[0]
+    pid = jnp.take_along_axis(pages, (pos // page_size)[:, None],
+                              axis=1)[:, 0]                       # (B,)
+    off = pos % page_size
+    val = delta.astype(pool.dtype)
+    if stacked:
+        # (G, B, KV, 1, D) -> (B, G, KV, D); advanced indices (pid, off)
+        # are separated by slices, so the batch axis moves to the front
+        val = jnp.moveaxis(val[:, :, :, 0, :], 1, 0)
+        return pool.at[:, pid, :, off, :].set(val)
+    return pool.at[pid, :, off, :].set(val[:, :, 0, :])
+
+
+def _page_view_block(block_cache, pages):
+    """Replace a block's attention page pools by per-slot gathered views in
+    the dense (…, B, KV, T, D) layout; non-attention caches (SSM state) and
+    dense caches pass through untouched."""
+    if pages is None or not (isinstance(block_cache, dict)
+                             and "self" in block_cache):
+        return block_cache
+    return {**block_cache,
+            "self": {kk: gather_pages(block_cache["self"][kk], pages)
+                     for kk in ("k", "v")}}
+
+
+def _page_views(block_caches, pages):
+    return tuple(_page_view_block(bc, pages) for bc in block_caches)
+
+
+def _apply_cache_update(old_layer_cache, upd, pos, *, pages=None,
+                        page_size=None, update_mask=None):
     """Apply a block's cache update to an UNSTACKED layer cache."""
     if upd is None:
         return old_layer_cache
     out = {}
     for key, val in upd.items():
         if key == "self" and _is_delta(val):
-            out["self"] = {
-                kk: _write_kv(old_layer_cache["self"][kk],
-                              val[f"{kk}_delta"], pos, batch_axis=0)
-                for kk in ("k", "v")}
+            if pages is not None:
+                out["self"] = {
+                    kk: _write_kv_paged(old_layer_cache["self"][kk],
+                                        val[f"{kk}_delta"], pos, pages,
+                                        page_size, stacked=False)
+                    for kk in ("k", "v")}
+            else:
+                out["self"] = {
+                    kk: _write_kv(old_layer_cache["self"][kk],
+                                  val[f"{kk}_delta"], pos, batch_axis=0)
+                    for kk in ("k", "v")}
         else:
+            val = val.astype(old_layer_cache[key].dtype)
+            if update_mask is not None:
+                m = update_mask.reshape((-1,) + (1,) * (val.ndim - 1))
+                val = jnp.where(m, val, old_layer_cache[key])
             out[key] = val
     return out
 
 
-def _apply_stacked_updates(stacked, updates, pos):
+def _apply_stacked_updates(stacked, updates, pos, *, pages=None,
+                           page_size=None, update_mask=None):
     """Apply scan-collected per-layer updates to a stacked cache.
 
     KV deltas (G,B,KV,S,D) are written with ONE dynamic-update-slice at the
-    token position (or one per slot for per-slot ``pos`` vectors); SSM states
-    come out of the scan already whole, stacked — they simply replace the old
-    buffers."""
+    token position (or one per slot for per-slot ``pos`` vectors; one
+    scatter through the page table for paged pools); SSM states come out of
+    the scan already whole, stacked — they simply replace the old buffers.
+
+    ``update_mask`` (B,) bool: slots whose NON-delta state (SSM conv tail +
+    SSD state) may advance.  Attention K/V of masked-out slots is already
+    harmless (paged decode writes them to the trash page), but SSM state is
+    a dense per-slot buffer with no page indirection — a mid-prefill slot's
+    carried state must not be advanced by interleaved decode steps of the
+    live batch (DESIGN.md §9)."""
     if updates is None:
         return stacked
     new = dict(stacked)
     for key, val in updates.items():
         if key == "self" and _is_delta(val):
-            new["self"] = {
-                kk: _write_kv(stacked["self"][kk],
-                              val[f"{kk}_delta"].astype(stacked["self"][kk].dtype),
-                              pos, batch_axis=1)
-                for kk in ("k", "v")}
+            if pages is not None:
+                new["self"] = {
+                    kk: _write_kv_paged(stacked["self"][kk],
+                                        val[f"{kk}_delta"], pos, pages,
+                                        page_size, stacked=True)
+                    for kk in ("k", "v")}
+            else:
+                new["self"] = {
+                    kk: _write_kv(stacked["self"][kk],
+                                  val[f"{kk}_delta"].astype(stacked["self"][kk].dtype),
+                                  pos, batch_axis=1)
+                    for kk in ("k", "v")}
         else:
-            new[key] = val.astype(stacked[key].dtype)
+            val = val.astype(stacked[key].dtype)
+            if update_mask is not None:
+                # stacked leaves are (G, B, ...): batch is axis 1
+                m = update_mask.reshape((1, -1) + (1,) * (val.ndim - 2))
+                val = jnp.where(m, val, stacked[key])
+            new[key] = val
     return new
 
 
@@ -433,10 +525,54 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, enc_len: int = 0):
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, *, num_pages: int,
+                     page_size: int, enc_len: int = 0):
+    """Paged serving cache: attention layers hold ONE shared page pool
+    (P, KV, page_size, D) per k/v instead of per-slot (B, KV, max_len, D)
+    buffers — memory scales with pages in use, not batch × worst-case
+    request.  SSM states are O(1) per slot and stay dense (B, …).  The
+    page table mapping slots to pool pages lives host-side in the serving
+    engine and is passed into each jitted program (DESIGN.md §9)."""
+    plan = layer_plan(cfg)
+    dtype = jnp.dtype(cfg.kv_cache_dtype or cfg.compute_dtype)
+    if cfg.family == "encdec":
+        raise NotImplementedError("paged KV for encdec (cross-attention "
+                                  "buffers) is not implemented")
+
+    def block_cache(kind):
+        if kind == "ssm":
+            return SSMCache.init(cfg, batch)
+        return {"self": {
+            "k": jnp.zeros((num_pages, cfg.n_kv_heads, page_size, cfg.hd),
+                           dtype),
+            "v": jnp.zeros((num_pages, cfg.n_kv_heads, page_size, cfg.hd),
+                           dtype),
+        }}
+
+    def stacked_cache(kind):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (plan.n_groups,) + x.shape).copy()
+            if plan.n_groups > 1 else x[None], block_cache(kind))
+
+    return {
+        "groups": [stacked_cache(kind) for kind in plan.pattern],
+        "tail": [block_cache(kind) for kind in plan.tail],
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
 def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens, *,
-                enc_out=None, embeds=None, impl: str = "auto"):
+                enc_out=None, embeds=None, impl: str = "auto",
+                pages=None, page_size: int | None = None, valid_len=None,
+                update_mask=None):
     """One cache-extending step.  tokens: (B, S) int32 (or embeds (B,S,d));
     S == 1 is decode, S > 1 is batched prefill (cache must be fresh).
+    ``pages``/``page_size``: the cache's attention buffers are shared page
+    pools; reads gather per-slot views through the page table, writes
+    scatter through it.  ``valid_len``: true prompt length of a bucketed
+    (right-padded) prefill — masks SSM state updates past the true end.
+    ``update_mask`` (B,) bool: freeze the per-slot SSM state of masked-out
+    slots (mid-prefill slots under chunk interleaving).
     Returns (logits (B, S, V), new_cache)."""
     plan = layer_plan(cfg)
     if embeds is None:
@@ -475,27 +611,36 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens, *,
                  else _constrain_block_params(gparams[i]))
             h, nc, _ = apply_block(cfg, kind, p, h, positions=positions,
                                    enc_out=enc_out, cache=gcache[i],
-                                   cache_len=pos, impl=impl)
+                                   cache_len=pos, impl=impl,
+                                   valid_len=valid_len)
             updates.append(nc)
         return h, tuple(updates)
 
     groups = tuple(params["groups"])
     gcaches = tuple(cache["groups"])
+    # paged: gather each slot's pages into dense-layout K/V views ONCE per
+    # pattern (outside the layer scan — the stacked gather covers every
+    # group), so the blocks read a view indistinguishable from a dense
+    # cache; writes go through the page table into the pools afterwards
+    read_gcaches = _page_views(gcaches, pages)
+    read_tail = [_page_view_block(bc, pages) for bc in cache["tail"]]
     if jax.tree.leaves(groups):
         n_groups = jax.tree.leaves(groups)[0].shape[0]
         if cfg.scan_layers and n_groups > 1:
-            x, updates = jax.lax.scan(group_body, x, (groups, gcaches))
+            x, updates = jax.lax.scan(group_body, x, (groups, read_gcaches))
         else:
             outs = []
             for g in range(n_groups):
                 gp = jax.tree.map(lambda t: t[g], groups)
-                gc = jax.tree.map(lambda t: t[g], gcaches)
+                gc = jax.tree.map(lambda t: t[g], read_gcaches)
                 x, upd = group_body(x, (gp, gc))
                 outs.append(upd)
             updates = jax.tree.map(lambda *ts: jnp.stack(ts), *outs) \
                 if outs else None
         new_gcaches = tuple(
-            _apply_stacked_updates(gcaches[i], updates[i], pos)
+            _apply_stacked_updates(gcaches[i], updates[i], pos,
+                                   pages=pages, page_size=page_size,
+                                   update_mask=update_mask)
             for i in range(len(plan.pattern)))
     else:
         new_gcaches = gcaches
@@ -504,14 +649,170 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens, *,
     for i, kind in enumerate(plan.tail):
         x, nc, _ = apply_block(cfg, kind, params["tail"][i], x,
                                positions=positions, enc_out=enc_out,
-                               cache=cache["tail"][i], cache_len=pos, impl=impl)
-        new_tail.append(_apply_cache_update(cache["tail"][i], nc, pos))
+                               cache=read_tail[i], cache_len=pos,
+                               impl=impl, valid_len=valid_len)
+        new_tail.append(_apply_cache_update(cache["tail"][i], nc, pos,
+                                            pages=pages, page_size=page_size,
+                                            update_mask=update_mask))
 
     x = apply_norm(cfg, params["norm_f"], x)
     logits = unembed(cfg, params["embed"], x)
     logits = logical(logits, "batch", None, "vocab")
     new_cache = {"groups": list(new_gcaches), "tail": new_tail,
                  "len": pos + S}
+    return logits, new_cache
+
+
+def _write_kv_chunk_paged(pool, delta, start, pages_1d, page_size, *,
+                          stacked: bool):
+    """Write a whole prefill chunk's K/V into a slot's pages.
+
+    Chunks are page-aligned by construction (``start`` and the chunk length
+    are multiples of ``page_size``), so a chunk of C tokens is exactly
+    C / page_size whole pages: reshape the delta into pages and scatter them
+    at the slot's physical page ids — one scatter per chunk, not per token.
+    """
+    C = delta.shape[-2]
+    n = C // page_size
+    pids = jax.lax.dynamic_slice_in_dim(pages_1d, start // page_size, n)
+    if stacked:
+        G, _, KV, _, D = delta.shape
+        val = delta[:, 0].reshape(G, KV, n, page_size, D).swapaxes(1, 2)
+        return pool.at[:, pids].set(val.astype(pool.dtype))
+    _, KV, _, D = delta.shape
+    val = delta[0].reshape(KV, n, page_size, D).swapaxes(0, 1)
+    return pool.at[pids].set(val.astype(pool.dtype))
+
+
+def chunk_prefill_step(cfg: ModelConfig, params: dict, cache: dict, tokens, *,
+                       slot, start, valid_len, pages_row=None,
+                       page_size: int | None = None, impl: str = "auto"):
+    """One prompt chunk of a chunked prefill into batch slot ``slot``.
+
+    tokens: (1, C) — the chunk, right-padded to its bucket; ``start`` is the
+    chunk's first logical position, ``valid_len`` the true (unpadded) token
+    count in this chunk.  The chunk attends over the slot's already-written
+    cache (positions < start) plus itself, and SSM layers continue from the
+    slot's cached conv tail + state — so N chunks produce exactly the state
+    one full prefill would.  Attention K/V go through ``pages_row`` (the
+    slot's page-table row, (1, n_pages)) into the shared pool; SSM state is
+    sliced out of / written back into the slot's row of the dense per-slot
+    buffers.  Padding past ``valid_len`` writes garbage K/V into the slot's
+    own pages (positions ≥ the true length are never valid reads and are
+    overwritten by decode) and is masked out of SSM state updates.
+
+    Returns (last_logits (1, 1, V) at the true last chunk token, new_cache).
+    The slot's cache ``len`` is set to ``start + valid_len`` — re-asserted
+    every chunk, so decode steps interleaved between chunks (which bump
+    every slot's length) cannot drift a mid-prefill slot.
+    """
+    if cfg.family == "encdec":
+        raise NotImplementedError("chunked prefill for encdec models")
+    plan = layer_plan(cfg)
+    x = embed(cfg, params["embed"], tokens)
+    C = x.shape[1]
+    positions = start + jnp.arange(C, dtype=jnp.int32)
+    x = logical(x, "batch", "seq", "embed")
+
+    def slot_row(tree):
+        return jax.tree.map(
+            lambda t: jax.lax.dynamic_slice_in_dim(t, slot, 1, axis=0), tree)
+
+    def block_step(kind, p, h, bcache):
+        """Run one block on the chunk; returns (h, update) where ``update``
+        is an SSM 1-row cache or an attention K/V delta.  ``bcache`` holds
+        gathered page VIEWS for attention kinds (reads only — writes go to
+        the pools in ``apply_update``) and full per-slot buffers for SSM."""
+        if kind == "ssm":
+            # FIRST chunk (start == 0): the slot's dense SSM buffers still
+            # hold the previous occupant's state — there is no splice step
+            # in the paged engine to replace them, so continue from the
+            # fresh-prefill zeros instead (attention needs no equivalent:
+            # its first chunk skips the cache read behind a lax.cond)
+            c = jax.tree.map(
+                lambda t: jnp.where(jnp.asarray(start) > 0, t,
+                                    jnp.zeros_like(t)),
+                slot_row(bcache))
+        else:
+            c = bcache
+        return apply_block(cfg, kind, p, h, positions=positions, cache=c,
+                           cache_len=start, impl=impl,
+                           chunk_continue=True, valid_len=valid_len)[:2]
+
+    def apply_update(kind, bcache, upd, *, stacked):
+        if upd is None:
+            return bcache
+        if kind == "ssm":
+            # write the 1-row continuation state back into the slot's row
+            axis = 1 if stacked else 0
+            return jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=axis),
+                bcache, upd)
+        out = dict(bcache)
+        for key, val in upd.items():
+            if key == "self" and _is_delta(val):
+                out["self"] = {
+                    kk: _write_kv_chunk_paged(bcache["self"][kk],
+                                              val[f"{kk}_delta"], start,
+                                              pages_row[0], page_size,
+                                              stacked=stacked)
+                    for kk in ("k", "v")}
+            else:
+                out[key] = val
+        return out
+
+    def group_body(carry, xs):
+        h = carry
+        gparams, gcache = xs
+        updates = []
+        for i, kind in enumerate(plan.pattern):
+            p = (params.get("shared") if kind == "shared"
+                 else _constrain_block_params(gparams[i]))
+            h, upd = block_step(kind, p, h, gcache[i])
+            updates.append(upd)
+        return h, tuple(updates)
+
+    groups = tuple(params["groups"])
+    gcaches = tuple(cache["groups"])
+    # attention reads go through the slot's gathered page view (one stacked
+    # gather per pattern, outside the scan); writes go into the pools
+    read_gcaches = _page_views(gcaches, pages_row)
+    read_tail = [_page_view_block(bc, pages_row) for bc in cache["tail"]]
+    if jax.tree.leaves(groups):
+        n_groups = jax.tree.leaves(groups)[0].shape[0]
+        if cfg.scan_layers and n_groups > 1:
+            x, updates = jax.lax.scan(group_body, x, (groups, read_gcaches))
+        else:
+            outs = []
+            for g in range(n_groups):
+                gp = jax.tree.map(lambda t: t[g], groups)
+                gc = jax.tree.map(lambda t: t[g], read_gcaches)
+                x, upd = group_body(x, (gp, gc))
+                outs.append(upd)
+            updates = jax.tree.map(lambda *ts: jnp.stack(ts), *outs) \
+                if outs else None
+        new_gcaches = tuple(
+            apply_update(kind, gcaches[i], updates[i], stacked=True)
+            for i, kind in enumerate(plan.pattern))
+    else:
+        new_gcaches = gcaches
+
+    new_tail = []
+    for i, kind in enumerate(plan.tail):
+        x, upd = block_step(kind, params["tail"][i], x, read_tail[i])
+        new_tail.append(apply_update(kind, cache["tail"][i], upd,
+                                     stacked=False))
+
+    x = apply_norm(cfg, params["norm_f"], x)
+    # only the true last chunk token's logits are ever consumed (first-token
+    # sampling after the final chunk) — slice BEFORE the unembed so
+    # intermediate chunks never pay a (C, V) projection
+    last = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
+    logits = unembed(cfg, params["embed"], last)
+    new_cache = {"groups": list(new_gcaches), "tail": new_tail,
+                 "len": jnp.asarray(cache["len"]).at[slot].set(
+                     start + valid_len)}
     return logits, new_cache
 
 

@@ -1,10 +1,13 @@
-from .engine import Engine, SamplingParams, count_generated
-from .scheduler import (DEFAULT_BUCKETS, HyParRequestTracker, Request,
-                        RequestQueue, RequestResult, ServeScheduler,
+from .engine import (Engine, PagedEngine, SamplingParams, chunk_buckets_for,
+                     chunk_plan, count_generated)
+from .scheduler import (DEFAULT_BUCKETS, HyParRequestTracker, PageAllocator,
+                        Request, RequestQueue, RequestResult, ServeScheduler,
                         SlotState)
 
 __all__ = [
-    "Engine", "SamplingParams", "count_generated",
+    "Engine", "PagedEngine", "SamplingParams", "count_generated",
+    "chunk_plan", "chunk_buckets_for",
     "Request", "RequestResult", "RequestQueue", "SlotState",
-    "ServeScheduler", "HyParRequestTracker", "DEFAULT_BUCKETS",
+    "ServeScheduler", "HyParRequestTracker", "PageAllocator",
+    "DEFAULT_BUCKETS",
 ]

@@ -36,17 +36,21 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.transformer import decode_step, init_cache, layer_plan
+from repro.models.transformer import (chunk_prefill_step, decode_step,
+                                      init_cache, init_paged_cache,
+                                      layer_plan)
 from repro.models.layers import apply_norm
 from repro.models.transformer import _run_stack  # encoder reuse
 
-__all__ = ["Engine", "SamplingParams", "count_generated"]
+__all__ = ["Engine", "PagedEngine", "SamplingParams", "count_generated",
+           "chunk_plan", "chunk_buckets_for"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,9 +95,11 @@ class Engine:
                                   e, jnp.arange(e.shape[1]))
                 enc_out = apply_norm(cfg, params["enc_norm_f"], e)
             logits, cache = decode_step(cfg, params, cache, tokens,
-                                        enc_out=enc_out, embeds=embeds)
+                                        enc_out=enc_out, embeds=embeds,
+                                        valid_len=last_idx + 1)
             # logits at the *true* last prompt token (bucketed prompts are
-            # right-padded; the pad tail must not pick the sampled logits)
+            # right-padded; the pad tail must not pick the sampled logits —
+            # and for SSM layers the pad must not decay into the state)
             last = jax.lax.dynamic_slice_in_dim(logits, last_idx, 1, axis=1)
             B = (tokens if tokens is not None else embeds).shape[0]
             cache = {**cache, "len": jnp.broadcast_to(cache["len"], (B,))}
@@ -253,6 +259,213 @@ class Engine:
         self.cache, self._enc_out = self._splice(
             self.cache, mini_cache, self._enc_out, mini_enc, slot, true_len)
         return logits
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache + chunked prefill (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+def chunk_buckets_for(prefill_chunk: int, page_size: int) -> tuple[int, ...]:
+    """Length buckets for the FINAL (partial) chunk of a prompt: power-of-two
+    multiples of the page size up to the full chunk length.  One jitted
+    chunk-prefill program compiles per bucket, so the compile count is
+    ``len(buckets)`` regardless of how many prompts are served."""
+    buckets = {prefill_chunk}
+    b = page_size
+    while b < prefill_chunk:
+        buckets.add(b)
+        b *= 2
+    return tuple(sorted(buckets))
+
+
+def chunk_plan(true_len: int, prefill_chunk: int,
+               buckets: Sequence[int]) -> list[tuple[int, int, int]]:
+    """Split a prompt into page-aligned chunks: full ``prefill_chunk``-sized
+    chunks, then the remainder padded up to the smallest fitting bucket.
+    Returns ``[(start, bucket_len, valid_in_chunk), ...]``."""
+    if true_len <= 0:
+        raise ValueError(f"true_len {true_len} must be positive")
+    plan = []
+    start = 0
+    while true_len - start > prefill_chunk:
+        plan.append((start, prefill_chunk, prefill_chunk))
+        start += prefill_chunk
+    rem = true_len - start
+    fitting = [b for b in buckets if b >= rem]
+    if not fitting:
+        raise ValueError(f"no chunk bucket fits remainder {rem} "
+                         f"(buckets {tuple(buckets)})")
+    plan.append((start, min(fitting), rem))
+    return plan
+
+
+class PagedEngine:
+    """Serving engine over a paged KV cache with chunked prefill.
+
+    Attention layers share one page pool ``(num_pages, KV, page_size, D)``
+    per k/v (group-stacked like dense caches); a slot's cache is whatever
+    pages the scheduler's allocator assigned it, recorded in a *host-side*
+    page table ``(batch, max_pages_per_slot)`` that is passed into every
+    jitted program.  Page 0 is reserved as the trash page: free (and
+    mid-prefill) slots' table rows point at it, so the always-full-batch
+    decode program can write their dead K/V somewhere harmless without
+    masking — live slots never alias it (allocator hands out pages ≥ 1).
+
+    Prefill is chunked: ``prefill_chunk``-sized page-aligned chunks run
+    through ONE jitted chunk program per chunk-length bucket
+    (``trace_count("chunk_prefill")`` = #buckets used), each attending over
+    the slot's previously-written pages plus itself, so the scheduler can
+    interleave live-batch decode steps between the chunks of a long prompt
+    instead of stalling on it.  During a multi-chunk prefill the slot's
+    LIVE table row stays on the trash page (interleaved decodes of the
+    still-empty slot must not touch the real pages); the chunk program gets
+    the real page row as an argument, and ``commit_slot`` installs it once
+    the last chunk has run.  Surviving slots stay bit-identical under all
+    of this: chunk writes land only in the inserting slot's own pages, and
+    every other slot's gathered view depends only on its own table row.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, batch: int, max_len: int,
+                 page_size: int = 16, num_pages: int | None = None,
+                 prefill_chunk: int = 64, donate_cache: bool = True):
+        if cfg.family == "encdec":
+            raise NotImplementedError("paged serving for encdec models "
+                                      "(cross-attention buffers)")
+        if prefill_chunk % page_size:
+            raise ValueError(f"prefill_chunk {prefill_chunk} must be a "
+                             f"multiple of page_size {page_size}")
+        self.cfg, self.params = cfg, params
+        self.batch, self.max_len = batch, max_len
+        self.page_size = page_size
+        self.chunk_len = prefill_chunk
+        self.max_pages = -(-max_len // page_size)       # per-slot table width
+        # default pool: the dense engine's footprint (batch × max_len) plus
+        # the trash page — callers shrink it to oversubscribe, or keep the
+        # bytes and raise ``batch`` instead (more slots, same memory)
+        self.num_pages = (1 + batch * self.max_pages if num_pages is None
+                          else num_pages)
+        self.chunk_buckets = chunk_buckets_for(prefill_chunk, page_size)
+        self._trace_counts: collections.Counter = collections.Counter()
+        # host-side page table; all-zero rows = trash page (slot empty)
+        self.page_table = np.zeros((batch, self.max_pages), np.int32)
+
+        def _decode(params, cache, tokens, page_table, update_mask):
+            self._trace_counts["decode"] += 1
+            return decode_step(cfg, params, cache, tokens, pages=page_table,
+                               page_size=page_size, update_mask=update_mask)
+
+        def _chunk(params, cache, tokens, pages_row, slot, start, valid_len):
+            self._trace_counts["chunk_prefill"] += 1
+            return chunk_prefill_step(cfg, params, cache, tokens, slot=slot,
+                                      start=start, valid_len=valid_len,
+                                      pages_row=pages_row,
+                                      page_size=page_size)
+
+        donate = (1,) if donate_cache else ()
+        self._decode = jax.jit(_decode, donate_argnums=donate)
+        self._chunk = jax.jit(_chunk, donate_argnums=donate)
+        # device copy of the page table, refreshed only when a slot commits
+        # or frees — decode steps between table changes reuse it instead of
+        # paying a host->device transfer per step
+        self._pt_device = None
+        self.cache = None
+
+    def trace_count(self, name: str) -> int:
+        """Trace (= compiled-signature) count of program ``name``
+        (chunk_prefill|decode)."""
+        return self._trace_counts[name]
+
+    # -- lifecycle -------------------------------------------------------------
+    def ensure_batch(self, *, enc_len: int | None = None) -> None:
+        """Initialise an empty live batch (all slots free, zero lengths,
+        every table row on the trash page)."""
+        if self.cache is None:
+            self.cache = init_paged_cache(self.cfg, self.batch,
+                                          num_pages=self.num_pages,
+                                          page_size=self.page_size)
+
+    def pages_needed(self, true_len: int, max_new: int) -> int:
+        """Pages a request needs for its whole lifetime: the padded prefill
+        span or the prompt + generation budget, whichever reaches further.
+        Reserved in full at admission — no mid-decode allocation, so an
+        admitted request can never be preempted by pool exhaustion."""
+        plan = chunk_plan(true_len, self.chunk_len, self.chunk_buckets)
+        span = max(plan[-1][0] + plan[-1][1], true_len + max_new)
+        return -(-span // self.page_size)
+
+    # -- chunked prefill -------------------------------------------------------
+    def prefill_chunk(self, slot: int, tokens_1xC, page_ids, start: int,
+                      valid_in_chunk: int):
+        """Run one chunk through the slot's pages (``page_ids``: the slot's
+        full allocation, host list).  Returns the logits at the chunk's true
+        last token — only the final chunk's are meaningful."""
+        self.ensure_batch()
+        if len(page_ids) > self.max_pages:
+            raise ValueError(f"{len(page_ids)} pages exceed the per-slot "
+                             f"table width {self.max_pages}")
+        row = np.zeros((1, self.max_pages), np.int32)
+        row[0, :len(page_ids)] = page_ids
+        logits, self.cache = self._chunk(self.params, self.cache, tokens_1xC,
+                                         row, slot, start, valid_in_chunk)
+        return logits
+
+    def commit_slot(self, slot: int, page_ids) -> None:
+        """Install the slot's pages into the live table — decode reads (and
+        writes) go through them from the next step on."""
+        row = np.zeros((self.max_pages,), np.int32)
+        row[:len(page_ids)] = page_ids
+        self.page_table[slot] = row
+        self._pt_device = None
+
+    def free_slot(self, slot: int) -> None:
+        """Retire the slot: its table row points back at the trash page.
+        The pages themselves go back to the scheduler's allocator."""
+        self.page_table[slot] = 0
+        self._pt_device = None
+
+    def insert(self, slot: int, tokens, *, true_len: int | None = None,
+               page_ids=None, max_new: int = 0):
+        """Convenience one-call insert: run every chunk back-to-back (no
+        decode interleaving — the scheduler drives chunks itself for that)
+        and commit the pages.  ``tokens``: (S,) or (1, S) prompt."""
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        true_len = len(toks) if true_len is None else int(true_len)
+        if page_ids is None:
+            raise ValueError("insert() needs the slot's allocated page_ids")
+        need = self.pages_needed(true_len, max_new)
+        if len(page_ids) < need:
+            raise ValueError(f"slot {slot} got {len(page_ids)} pages, needs "
+                             f"{need}")
+        logits = None
+        for start, blen, vlen in chunk_plan(true_len, self.chunk_len,
+                                            self.chunk_buckets):
+            ck = np.zeros((1, blen), np.int32)
+            ck[0, :vlen] = toks[start:start + vlen]
+            logits = self.prefill_chunk(slot, jnp.asarray(ck), page_ids,
+                                        start, vlen)
+        self.commit_slot(slot, page_ids)
+        return logits
+
+    # -- decode ----------------------------------------------------------------
+    def decode(self, tokens, live_mask=None):
+        """tokens: (batch, 1) — one step for every slot, page-table reads
+        and writes.  ``live_mask`` (batch,) bool: slots whose per-slot SSM
+        state may advance — mid-prefill slots must be masked out, or the
+        interleaved decode would corrupt the state their next chunk
+        continues from (their attention K/V needs no mask: the live page
+        table parks them on the trash page).  Defaults to all-live."""
+        self.ensure_batch()
+        if self._pt_device is None:
+            self._pt_device = jnp.asarray(self.page_table)
+        if live_mask is None:
+            live_mask = np.ones((self.batch,), bool)
+        logits, self.cache = self._decode(self.params, self.cache, tokens,
+                                          self._pt_device,
+                                          np.asarray(live_mask, bool))
+        return logits
+
+    _sample = Engine._sample
 
 
 def _splice_batch(full, one, slot):

@@ -33,31 +33,41 @@ def compare(base: dict[str, dict], new: dict[str, dict],
     for name in sorted(base.keys() | new.keys()):
         b, n = base.get(name), new.get(name)
         if b is None:
-            lines.append(f"  {name:>28}: (new row) "
-                         f"median {n['median_s'] * 1e6:10.1f} us")
+            med = n.get("median_s")
+            lines.append(f"  {name:>28}: (new row) median "
+                         + (f"{med * 1e6:10.1f} us" if med is not None
+                            else "missing"))
             continue
         if n is None:
             lines.append(f"  {name:>28}: (row removed)")
             continue
-        if not b["median_s"] or b["median_s"] != b["median_s"]:  # 0 or NaN
+        b_med, n_med = b.get("median_s"), n.get("median_s")
+        if n_med is None:
+            # schema drift: a row without median_s can't be compared — like
+            # a NaN, that must show up as a regression, not a silent pass
+            lines.append(f"  {name:>28}: NEW row has no median_s  "
+                         f"<-- REGRESSION (schema drift)")
+            n_regressed += 1
+            continue
+        if b_med is None or not b_med or b_med != b_med:        # 0 or NaN
             lines.append(f"  {name:>28}: baseline median unusable, skipped")
             continue
-        if n["median_s"] != n["median_s"]:                       # NaN
+        if n_med != n_med:                                       # NaN
             # a broken run records NaN medians (see run_trace) — that is
             # the worst regression, not a pass
             lines.append(f"  {name:>28}: NEW median is NaN  <-- REGRESSION "
                          f"(broken run)")
             n_regressed += 1
             continue
-        delta = (n["median_s"] / b["median_s"] - 1.0) * 100.0
+        delta = (n_med / b_med - 1.0) * 100.0
         flag = ""
         if delta > threshold_pct:
             flag = f"  <-- REGRESSION (> {threshold_pct:g}%)"
             n_regressed += 1
         elif delta < -threshold_pct:
             flag = "  (improved)"
-        lines.append(f"  {name:>28}: {b['median_s'] * 1e6:10.1f} -> "
-                     f"{n['median_s'] * 1e6:10.1f} us  {delta:+7.1f}%{flag}")
+        lines.append(f"  {name:>28}: {b_med * 1e6:10.1f} -> "
+                     f"{n_med * 1e6:10.1f} us  {delta:+7.1f}%{flag}")
     return lines, n_regressed
 
 

@@ -13,7 +13,12 @@ the CLI):
   paper's job model exists for): ``serve_direct_mixed`` is the dense
   baseline, ``serve_direct_paged``/``serve_hypar_paged`` run the paged KV
   cache + chunked prefill path at the SAME batch and the dense engine's
-  exact KV byte budget.  A paged insert is ONE chunk-prefill call writing
+  exact KV byte budget; ``serve_paged_preempt`` reruns the mixed trace on
+  a page pool HALVED to below the working set, comparing full-lifetime
+  reservation (which must defer admissions) against reserve-on-demand +
+  vLLM-style preemption at equal pool bytes — extras ``preempt_count``,
+  ``resume_tokens_recomputed`` and ``speedup_vs_lifetime_pct``
+  (DESIGN.md §10).  A paged insert is ONE chunk-prefill call writing
   straight into the slot's pages, vs the dense trio (fresh mini-cache +
   bucket-padded prefill + whole-cache splice), at equal decode cost —
   the measured tok/s and TTFT-tail edge.  Paged rows carry
@@ -59,6 +64,10 @@ class _Args:
     page_size: int = 16
     num_pages: int | None = None
     prefill_chunk: int = 64
+    reserve: str = "lifetime"
+    preempt_policy: str = "fewest"
+    admit_watermark: int = 0
+    max_new_mix: tuple | None = None
 
 
 def _smoke_args():
@@ -91,15 +100,37 @@ def _full_mixed():
                 page_size=16, prefill_chunk=128)
 
 
+def _smoke_constrained():
+    # the preemption trace: clients declare a 64-token cap but realised
+    # lengths average ~30 (the max_new_mix), so full-lifetime reservation
+    # provisions pages most requests never touch; the pool is 40% of the
+    # dense footprint — small enough that lifetime must defer admissions
+    # and demand must preempt at least once, large enough that recompute
+    # stays a sliver of the useful work
+    return dict(batch=8, n_requests=24, max_new=64, prompt_lens=(8, 16, 96),
+                page_size=16, prefill_chunk=96, max_new_mix=(8, 16, 32, 64))
+
+
+def _full_constrained():
+    return dict(batch=8, n_requests=48, max_new=64,
+                prompt_lens=(16, 32, 256), page_size=16, prefill_chunk=128,
+                max_new_mix=(8, 16, 32, 64))
+
+
 def _make_args(engine: str, *, batch, n_requests, max_new, prompt_lens,
                rate_per_s: float = 0.0, seed: int = 0, paged: bool = False,
                page_size: int = 16, num_pages: int | None = None,
-               prefill_chunk: int = 64) -> _Args:
+               prefill_chunk: int = 64, reserve: str = "lifetime",
+               preempt_policy: str = "fewest",
+               admit_watermark: int = 0,
+               max_new_mix: tuple | None = None) -> _Args:
     return _Args(engine=engine, batch=batch, strategy="greedy",
                  prompt_lens=tuple(prompt_lens), max_pending=None,
                  n_requests=n_requests, rate=rate_per_s, max_new=max_new,
                  seed=seed, paged=paged, page_size=page_size,
-                 num_pages=num_pages, prefill_chunk=prefill_chunk)
+                 num_pages=num_pages, prefill_chunk=prefill_chunk,
+                 reserve=reserve, preempt_policy=preempt_policy,
+                 admit_watermark=admit_watermark, max_new_mix=max_new_mix)
 
 
 def run_engine(engine: str, *, cfg, params, repeats: int = 1, **kw) -> dict:
@@ -201,4 +232,36 @@ def run(smoke: bool = False) -> list[dict]:
             * 100.0 if dense_tok_s else 0.0,
             chunk_traces=s["trace_counts"]["chunk_prefill"],
             decode_traces=s["trace_counts"]["decode"]))
+
+    # -- page-constrained trace: full-lifetime reservation vs
+    # reserve-on-demand + preemption at EQUAL pool bytes.  The pool holds
+    # 40% of the dense footprint, so lifetime reservation (provisioning the
+    # declared 64-token cap) must defer admissions while demand mode admits
+    # prompt spans, appends decode pages as realised lengths grow, and
+    # preempts (recompute-resume) on exhaustion — more live slots per
+    # (full-batch) decode step is the tok/s and TTFT edge.
+    cn = _smoke_constrained() if smoke else _full_constrained()
+    cbatch = cn["batch"]
+    cmax_len = max(cn["prompt_lens"]) + cn["max_new"] + 8
+    con_pages = 1 + int(cbatch * (-(-cmax_len // cn["page_size"])) * 0.4)
+    con = dict(cn, paged=True, num_pages=con_pages)
+    stats = compare_engines(
+        {"lifetime": _make_args("direct", **con),
+         "preempt": _make_args("direct", **dict(con, reserve="demand"))},
+        cfg=cfg, params=params)
+    lt, s = stats["lifetime"], stats["preempt"]
+    rows.append(_row(
+        "serve_paged_preempt", cbatch, cn["max_new"], s,
+        kv_budget_tokens=(con_pages - 1) * cn["page_size"],
+        pool_pages=con_pages, n_slots=cbatch,
+        preempt_count=s["preempt_count"],
+        resume_tokens_recomputed=s["resume_tokens_recomputed"],
+        admit_deferred=s["admit_deferred"],
+        lifetime_tok_per_s=lt["tok_per_s"],
+        lifetime_ttft_p95_s=lt["ttft_p95_s"],
+        lifetime_admit_deferred=lt["admit_deferred"],
+        speedup_vs_lifetime_pct=(s["tok_per_s"] / lt["tok_per_s"] - 1.0)
+        * 100.0 if lt["tok_per_s"] else 0.0,
+        chunk_traces=s["trace_counts"]["chunk_prefill"],
+        decode_traces=s["trace_counts"]["decode"]))
     return rows

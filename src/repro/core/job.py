@@ -303,12 +303,15 @@ class JobGraph:
         self._validate_job(job)
 
     def remove_job(self, name: str) -> Job:
-        """Retire a completed dynamic job from the graph (serving-time GC).
+        """Retire a dynamic job from the graph (serving-time GC, or a
+        preempted request's job returning to the master queue).
 
         Long-lived request streams (repro.serve.scheduler) add one dynamic
         job per admitted request; without retirement the graph grows without
         bound.  Removal is only legal when no remaining job consumes the
-        retired job's results."""
+        retired job's results.  The name becomes reusable: a preempted
+        request re-spawns its job under the same name when it resumes
+        (``HyParRequestTracker.preempt`` / ``place_batch``)."""
         job = self._by_name.get(name)
         if job is None:
             raise GraphValidationError(f"cannot remove unknown job {name}")

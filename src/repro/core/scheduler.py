@@ -326,6 +326,13 @@ class MasterScheduler:
         rather than loop over singletons: one call amortises the ordering /
         co-scheduling bookkeeping and lets locality and load terms see the
         whole wave at once.
+
+        Re-placement is legal: a job that was removed from the graph
+        (``JobGraph.remove_job`` — serving-time GC or a preempted dynamic
+        job returning to the master queue) may be re-spawned under the same
+        name and planned again in a later wave; the planner holds no state
+        keyed on job identity beyond the per-function EWMA, which is
+        exactly what SHOULD carry over to the re-placed incarnation.
         """
         loads = dict(loads or {})
         placements: list[Placement] = []

@@ -44,10 +44,17 @@ from repro.serve import (Engine, HyParRequestTracker, PagedEngine, Request,
 
 def build_trace(rng: np.random.Generator, cfg, *, n_requests: int,
                 rate_per_s: float, prompt_lens: list[int],
-                max_new: int) -> list[Request]:
+                max_new, budget_new: int | None = None) -> list[Request]:
     """Open-loop request trace: Poisson arrivals (exponential gaps at
-    ``rate_per_s``), prompt lengths drawn uniformly from ``prompt_lens``."""
+    ``rate_per_s``), prompt lengths drawn uniformly from ``prompt_lens``.
+
+    ``max_new`` may be a single realised length or a mix to draw from per
+    request; ``budget_new`` is the declared generation cap clients submit
+    alongside (admission must provision for it — full-lifetime reservation
+    pays its pages even when the realised length stops far short, which is
+    the over-provisioning reserve-on-demand exists to reclaim)."""
     t = 0.0
+    mix = [int(m) for m in np.atleast_1d(max_new)]
     reqs = []
     for rid in range(n_requests):
         t += rng.exponential(1.0 / rate_per_s) if rate_per_s > 0 else 0.0
@@ -57,7 +64,9 @@ def build_trace(rng: np.random.Generator, cfg, *, n_requests: int,
         if cfg.family == "encdec":
             enc = jnp.asarray(rng.standard_normal(
                 (1, 64, cfg.d_model), dtype=np.float32))
-        reqs.append(Request(rid=rid, tokens=toks, max_new=max_new,
+        reqs.append(Request(rid=rid, tokens=toks,
+                            max_new=int(rng.choice(mix)),
+                            budget_new=budget_new,
                             arrival_s=t, enc_embeds=enc))
     return reqs
 
@@ -95,7 +104,11 @@ def make_scheduler(cfg, params, args, *, sp: SamplingParams,
     buckets = sorted({1 << (int(l) - 1).bit_length() for l in args.prompt_lens
                       if l < max_len} | {16})
     return ServeScheduler(eng, sp=sp, tracker=tracker, buckets=buckets,
-                          queue=RequestQueue(max_pending=args.max_pending))
+                          queue=RequestQueue(max_pending=args.max_pending),
+                          reserve=getattr(args, "reserve", "lifetime"),
+                          preempt_policy=getattr(args, "preempt_policy",
+                                                 "fewest"),
+                          admit_watermark=getattr(args, "admit_watermark", 0))
 
 
 def prepare_trace(cfg, params, args, *, sp: SamplingParams):
@@ -108,11 +121,23 @@ def prepare_trace(cfg, params, args, *, sp: SamplingParams):
     max_len = max(args.prompt_lens) + args.max_new + 8
     rng = np.random.default_rng(args.seed)
     sched = make_scheduler(cfg, params, args, sp=sp, max_len=max_len)
-    sched.run(warmup_requests(rng, cfg, prompt_lens=args.prompt_lens))
-    sched.reset_metrics()
+    # the trace is drawn BEFORE the warmup touches the rng: warmup length
+    # sets vary per engine configuration (e.g. the chunk-bucket warmup
+    # below), and compared variants must replay the IDENTICAL trace
+    mix = getattr(args, "max_new_mix", None)
     reqs = build_trace(rng, cfg, n_requests=args.n_requests,
                        rate_per_s=args.rate, prompt_lens=list(args.prompt_lens),
-                       max_new=args.max_new)
+                       max_new=(mix if mix else args.max_new),
+                       budget_new=(args.max_new if mix else None))
+    warm_lens = list(args.prompt_lens)
+    if getattr(sched, "demand", False):
+        # resume re-prefills (prompt + retained tokens) land in arbitrary
+        # chunk buckets, not just the trace's prompt lengths — warm every
+        # bucket so no measured replay pays a chunk-program compile
+        warm_lens += [b for b in sched.engine.chunk_buckets
+                      if b + 2 <= sched.engine.max_len]
+    sched.run(warmup_requests(rng, cfg, prompt_lens=warm_lens))
+    sched.reset_metrics()
     return sched, reqs
 
 
@@ -127,7 +152,11 @@ def replay_trace(sched, reqs) -> tuple:
     results = sched.run(replay)
     wall = time.perf_counter() - t0
     rate = sum(r.n_generated for r in results) / wall if wall > 0 else 0.0
-    snap = (rate, results, wall, sched.occupancy, sched.queue.n_rejected)
+    # preempt/defer counters ride in the snapshot: reset_metrics() clears
+    # them on the scheduler, so trace_stats cannot read them post hoc
+    snap = (rate, results, wall, sched.occupancy, sched.queue.n_rejected,
+            sched.n_preempted, sched.resume_tokens_recomputed,
+            sched.n_admit_deferred)
     sched.reset_metrics()              # also clears occupancy + counters
     return snap
 
@@ -148,7 +177,8 @@ def run_trace(cfg, params, args, *, sp: SamplingParams,
 
 def trace_stats(args, sched, snap) -> dict:
     """Build the stats dict from the best replay snapshot."""
-    _, results, wall, occupancy, n_rejected = snap
+    (_, results, wall, occupancy, n_rejected,
+     n_preempted, resume_recomputed, n_deferred) = snap
     n_tok = sum(r.n_generated for r in results)
     # NaN, not 0.0, when nothing completed: a broken/all-shed run must not
     # record perfect-looking latencies into the BENCH trajectory
@@ -178,6 +208,10 @@ def trace_stats(args, sched, snap) -> dict:
         "lat_p95_s": float(np.percentile(lats, 95)),
         "occupancy": occupancy,
         "trace_counts": trace_counts,
+        "reserve": getattr(sched, "reserve", "lifetime"),
+        "preempt_count": n_preempted,
+        "resume_tokens_recomputed": resume_recomputed,
+        "admit_deferred": n_deferred,
     }
     return stats
 
@@ -249,6 +283,10 @@ def main(argv=None):
                     help="trace mode: mixed prompt lengths")
     ap.add_argument("--max-pending", type=int, default=None,
                     help="admission control: shed beyond this queue depth")
+    ap.add_argument("--max-new-mix", type=int, nargs="+", default=None,
+                    help="trace mode: realised generation lengths drawn "
+                         "per request; --max-new then acts as the declared "
+                         "cap admission provisions for")
     # paged KV + chunked prefill (trace mode)
     ap.add_argument("--paged", action="store_true",
                     help="trace mode: paged KV cache + chunked prefill "
@@ -261,9 +299,27 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=64,
                     help="paged: prompt chunk length interleaved with "
                          "decode steps (multiple of --page-size)")
+    ap.add_argument("--reserve", choices=["lifetime", "demand"],
+                    default="lifetime",
+                    help="paged: reserve a request's full prompt+budget "
+                         "page span at admission (lifetime) or only its "
+                         "prompt span, appending decode pages on demand "
+                         "with vLLM-style preemption on exhaustion (demand)")
+    ap.add_argument("--preempt-policy", choices=["fewest", "lifo"],
+                    default="fewest",
+                    help="demand: victim choice on pool exhaustion — "
+                         "fewest generated tokens (LIFO tiebreak) or "
+                         "latest admitted")
+    ap.add_argument("--admit-watermark", type=int, default=0,
+                    help="demand: free pages held back from admissions as "
+                         "decode-append headroom")
     args = ap.parse_args(argv)
     if args.paged and not args.trace:
         ap.error("--paged requires --trace (wave mode is dense-only)")
+    if args.reserve == "demand" and not args.paged:
+        ap.error("--reserve demand requires --paged")
+    if args.admit_watermark and args.reserve != "demand":
+        ap.error("--admit-watermark requires --reserve demand")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     from repro.models.transformer import init_params
@@ -277,6 +333,12 @@ def main(argv=None):
               f"requests={stats['n_requests']} "
               f"(+{stats['n_rejected']} shed) tokens={stats['gen_tokens']} "
               f"traces={stats['trace_counts']}")
+        if stats["paged"]:
+            print(f"reserve={stats['reserve']} "
+                  f"preempts={stats['preempt_count']} "
+                  f"resume_tokens_recomputed="
+                  f"{stats['resume_tokens_recomputed']} "
+                  f"admit_deferred={stats['admit_deferred']}")
         print(f"tok/s={stats['tok_per_s']:.1f} "
               f"ttft p50={stats['ttft_p50_s']*1e3:.1f}ms "
               f"p95={stats['ttft_p95_s']*1e3:.1f}ms "

@@ -386,10 +386,20 @@ class PagedEngine:
                                           page_size=self.page_size)
 
     def pages_needed(self, true_len: int, max_new: int) -> int:
-        """Pages a request needs for its whole lifetime: the padded prefill
-        span or the prompt + generation budget, whichever reaches further.
-        Reserved in full at admission — no mid-decode allocation, so an
-        admitted request can never be preempted by pool exhaustion."""
+        """Pages a request needs to hold ``true_len`` prompt tokens plus
+        ``max_new`` generated ones: the padded prefill span or the prompt +
+        generation budget, whichever reaches further.
+
+        Two reservation disciplines build on this (``ServeScheduler``):
+
+        * ``reserve="lifetime"`` calls it with the full generation budget at
+          admission — an admitted request can never hit pool exhaustion, at
+          the cost of reserving pages that sit empty until decode reaches
+          them;
+        * ``reserve="demand"`` calls it with ``max_new=1`` (the prompt span
+          plus room for the first decode write) and appends further decode
+          pages lazily via :meth:`append_page`, preempting on exhaustion.
+        """
         plan = chunk_plan(true_len, self.chunk_len, self.chunk_buckets)
         span = max(plan[-1][0] + plan[-1][1], true_len + max_new)
         return -(-span // self.page_size)
@@ -418,9 +428,32 @@ class PagedEngine:
         self.page_table[slot] = row
         self._pt_device = None
 
+    def append_page(self, slot: int, page_id: int) -> None:
+        """Reserve-on-demand decode growth: append one page to a COMMITTED
+        slot's live table row, just before the decode write that crosses
+        into it.  The row's current page count is its nonzero prefix —
+        ``commit_slot`` writes a prefix and appends only ever extend it, and
+        the allocator never hands out the trash page (id 0)."""
+        if page_id <= 0:
+            raise ValueError(f"page {page_id} is reserved (trash page) or "
+                             f"invalid — appends take allocator pages >= 1")
+        n = int(np.count_nonzero(self.page_table[slot]))
+        if n == 0:
+            raise ValueError(f"slot {slot} is not committed (row on the "
+                             f"trash page); append_page only grows live "
+                             f"slots")
+        if n >= self.max_pages:
+            raise ValueError(f"slot {slot} table is full "
+                             f"({self.max_pages} pages)")
+        self.page_table[slot, n] = page_id
+        self._pt_device = None
+
     def free_slot(self, slot: int) -> None:
-        """Retire the slot: its table row points back at the trash page.
-        The pages themselves go back to the scheduler's allocator."""
+        """Retire (or preempt) the slot: its table row points back at the
+        trash page, so interleaved decode writes of the parked slot land
+        somewhere harmless.  The pages themselves go back to the
+        scheduler's allocator — preempt-safe because reads of every other
+        slot depend only on that slot's own table row."""
         self.page_table[slot] = 0
         self._pt_device = None
 

@@ -64,9 +64,22 @@ DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512, 1024, 2048)
 class Request:
     rid: int
     tokens: np.ndarray              # (S,) int32 prompt
-    max_new: int
+    max_new: int                    # realised generation length
     arrival_s: float = 0.0          # scheduler-clock arrival time
     enc_embeds: Any = None          # encdec: (1, T, d) encoder input
+    # declared generation cap: what ADMISSION must budget for.  Clients
+    # declare a conservative cap (vLLM's max_tokens) while most requests
+    # stop far short of it — full-lifetime reservation pays pages for the
+    # cap, reserve-on-demand pays only for tokens actually generated.
+    # None => the realised length is the cap (PR-4 behaviour).
+    budget_new: int | None = None
+
+    @property
+    def declared_new(self) -> int:
+        """Generation cap admission reserves/validates against (>= the
+        realised ``max_new``)."""
+        return (self.max_new if self.budget_new is None
+                else max(self.max_new, self.budget_new))
 
 
 @dataclasses.dataclass
@@ -153,6 +166,15 @@ class SlotState:
     # chunked prefill in flight: remaining (start, bucket_len, valid) chunks
     pending_chunks: list[tuple[int, int, int]] = \
         dataclasses.field(default_factory=list)
+    # reserve-on-demand bookkeeping: admission order (LIFO preemption
+    # tiebreak), the token stream the in-flight prefill is replaying
+    # (prompt, or prompt + retained tokens on a resume), the suspended
+    # record being resumed, and how many tokens were already generated when
+    # the request was (re)admitted (resume-progress floor)
+    admit_seq: int = 0
+    prefill_tokens: np.ndarray | None = None
+    resume: "_Suspended | None" = None
+    resume_base: int = 0
 
     @property
     def free(self) -> bool:
@@ -161,6 +183,18 @@ class SlotState:
     @property
     def prefilling(self) -> bool:
         return self.request is not None and bool(self.pending_chunks)
+
+
+@dataclasses.dataclass
+class _Suspended:
+    """Host-side remains of a preempted request: the generated tokens (and
+    their timestamps — TTFT was already measured) survive the loss of the
+    device-side KV/SSM state, which is rebuilt on resume by chunked
+    re-prefill of prompt + retained tokens (recompute, not swap)."""
+
+    tokens: list[int]
+    token_s: list[float]
+    n_preempts: int = 1
 
 
 class PageAllocator:
@@ -172,14 +206,25 @@ class PageAllocator:
     the no-aliasing invariant the paged write paths rely on.  ``alloc``
     returns ``None`` when the pool cannot cover the request — the admission
     signal: the request stays queued until retirements free pages.
+
+    ``watermark`` free pages are held back from *admission* allocations
+    (:meth:`admit`): under reserve-on-demand the pool's slack is what decode
+    appends draw from, and admitting into the last free pages converts every
+    subsequent page-boundary crossing into a preemption.  Appends themselves
+    (``alloc``) may dip below the watermark — they are the demand the
+    headroom exists for.
     """
 
-    def __init__(self, num_pages: int, *, n_reserved: int = 1):
+    def __init__(self, num_pages: int, *, n_reserved: int = 1,
+                 watermark: int = 0):
         if num_pages <= n_reserved:
             raise ValueError(f"pool of {num_pages} pages has no usable pages "
                              f"beyond the {n_reserved} reserved")
+        if watermark < 0:
+            raise ValueError(f"watermark {watermark} must be >= 0")
         self.num_pages = num_pages
         self.n_reserved = n_reserved
+        self.watermark = watermark
         # stack popped from the end => ascending page ids first
         self._free = list(range(num_pages - 1, n_reserved - 1, -1))
         self._out: set[int] = set()
@@ -192,6 +237,12 @@ class PageAllocator:
     def n_outstanding(self) -> int:
         return len(self._out)
 
+    @property
+    def outstanding(self) -> frozenset[int]:
+        """Snapshot of the pages currently owned by some slot (invariant
+        checks: must equal the union of every slot's ``page_ids``)."""
+        return frozenset(self._out)
+
     def alloc(self, n: int) -> list[int] | None:
         if n <= 0:
             raise ValueError(f"cannot allocate {n} pages")
@@ -200,6 +251,13 @@ class PageAllocator:
         pages = [self._free.pop() for _ in range(n)]
         self._out.update(pages)
         return pages
+
+    def admit(self, n: int) -> list[int] | None:
+        """Admission-path allocation: refuses to leave fewer than
+        ``watermark`` pages free.  Decode appends use plain :meth:`alloc`."""
+        if len(self._free) - n < self.watermark:
+            return None
+        return self.alloc(n)
 
     def free(self, pages: Iterable[int]) -> None:
         for p in pages:
@@ -256,6 +314,7 @@ class HyParRequestTracker:
         self._job_of: dict[int, Job] = {}
         self._pending_jobs: list[Job] = []
         self.n_recovered = 0
+        self.n_preempted = 0
 
     # -- control function: dynamic job creation (paper §3.3) -------------------
     def _admit_control(self, inputs: ChunkedData, ctx: ControlContext) -> ChunkedData:
@@ -331,6 +390,18 @@ class HyParRequestTracker:
         self.store.release(job.name)
         self.graph.remove_job(job.name)
 
+    def preempt(self, req: Request) -> None:
+        """The request's pages were reclaimed: its dynamic job returns to
+        the master queue.  No result was recorded yet (``finish`` runs at
+        completion), so the job simply leaves the graph; when the request
+        resumes, the next ``place_batch`` wave re-spawns and re-places it —
+        the same re-queue path ``fail`` uses, minus the worker replacement
+        (the worker is healthy; only its page budget was taken)."""
+        job = self._job_of.pop(req.rid, None)
+        if job is not None:
+            self.graph.remove_job(job.name)
+        self.n_preempted += 1
+
     def observe(self, step_s: float, n_live: int) -> None:
         """Feed per-request decode-step time into the cost model's EWMA."""
         if n_live > 0:
@@ -369,6 +440,22 @@ class ServeScheduler:
     once; a slot whose request hit its budget or stop token is retired and
     immediately refillable.  All request-visible timing (arrival, TTFT,
     per-token) is measured on ``clock``.
+
+    Paged engines choose a reservation discipline (DESIGN.md §10):
+
+    * ``reserve="lifetime"`` — the PR-4 behaviour: a request reserves its
+      full prompt+budget page span at admission and can never be preempted;
+    * ``reserve="demand"`` — vLLM-style: admission reserves only the prompt
+      span (plus one decode write), decode pages are appended lazily at
+      page boundaries, and pool exhaustion preempts the lowest-priority
+      running slot (``preempt_policy``: ``fewest`` generated tokens with
+      LIFO tiebreak, or plain ``lifo``); the victim's generated tokens are
+      retained host-side and the request resumes — queue front — by chunked
+      re-prefill of prompt + retained tokens (recompute, not swap; the SSM
+      state is rebuilt by the same chunk path).  ``admit_watermark`` holds
+      back free pages from admissions as append headroom, and
+      ``resume_floor`` (default: one page of tokens) keeps a resumed
+      request from being re-preempted before it makes progress.
     """
 
     def __init__(self, engine: Engine, *,
@@ -377,7 +464,25 @@ class ServeScheduler:
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  tracker: HyParRequestTracker | None = None,
                  key=None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 reserve: str = "lifetime",
+                 preempt_policy: str = "fewest",
+                 admit_watermark: int = 0,
+                 resume_floor: int | None = None,
+                 pool_pages: int | None = None):
+        if reserve not in ("lifetime", "demand"):
+            raise ValueError(f"unknown reserve discipline {reserve!r}")
+        if preempt_policy not in ("fewest", "lifo"):
+            raise ValueError(f"unknown preempt policy {preempt_policy!r}")
+        if admit_watermark and reserve != "demand":
+            # the watermark is decode-append headroom — a concept only
+            # reserve-on-demand has.  Under lifetime reservation _fits
+            # screens against the raw pool while admit() would hold pages
+            # back, so a request could pass screening yet be deferred
+            # forever: reject the combination instead of livelocking.
+            raise ValueError("admit_watermark requires reserve='demand' "
+                             "(lifetime reservation has no decode appends "
+                             "to hold headroom for)")
         self.engine = engine
         self.sp = sp
         self.queue = queue if queue is not None else RequestQueue()
@@ -389,10 +494,29 @@ class ServeScheduler:
         if not self.buckets:
             raise ValueError(f"no prompt bucket fits max_len={engine.max_len}")
         self.paged = isinstance(engine, PagedEngine)
+        if reserve == "demand" and not self.paged:
+            raise ValueError("reserve='demand' needs a PagedEngine — the "
+                             "dense per-slot cache has nothing to append")
+        self.reserve = reserve
+        self.demand = reserve == "demand"
+        self.preempt_policy = preempt_policy
+        # resume-progress floor: a resumed request may not be preempted
+        # again until it has generated this many NEW tokens — without it a
+        # tight pool can starve one request with preempt/resume ping-pong.
+        # One page of decode progress is the natural default: by then the
+        # resume has at least paid for the page it appends.
+        self.resume_floor = (resume_floor if resume_floor is not None
+                             else (engine.page_size if self.paged else 0))
         # admission currency under paging: free pages, not free slots — the
-        # allocator owns every pool page except the engine's trash page
-        self.allocator = (PageAllocator(engine.num_pages) if self.paged
-                          else None)
+        # allocator owns every pool page except the engine's trash page.
+        # ``pool_pages`` restricts the allocator below the engine's physical
+        # pool (same compiled programs, smaller working set) — the
+        # oversubscription knob the soak tests sweep.
+        self.allocator = None
+        if self.paged:
+            usable = (engine.num_pages if pool_pages is None
+                      else min(pool_pages, engine.num_pages))
+            self.allocator = PageAllocator(usable, watermark=admit_watermark)
         self.tracker = tracker
         self.clock = clock
         self._key = key if key is not None else jax.random.PRNGKey(0)
@@ -400,16 +524,26 @@ class ServeScheduler:
         self.results: list[RequestResult] = []
         self.n_steps = 0
         self.occupied_slot_steps = 0
+        # reserve-on-demand state: suspended (preempted) requests by rid,
+        # admission sequence numbers, and the preemption counters the bench
+        # rows report
+        self._suspended: dict[int, _Suspended] = {}
+        self._admit_seq = 0
+        self.n_preempted = 0
+        self.n_admit_deferred = 0
+        self.resume_tokens_recomputed = 0
 
     # -- submission ------------------------------------------------------------
     def submit(self, tokens, max_new: int, *, enc_embeds=None,
-               arrival_s: float | None = None) -> int | None:
+               arrival_s: float | None = None,
+               budget_new: int | None = None) -> int | None:
         """Admit one request.  Returns its rid, or None when shed — either
         the queue is full, or the request can never fit the engine
-        (prompt bucket + budget vs ``max_len``)."""
+        (prompt bucket + declared budget vs ``max_len``)."""
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         req = Request(rid=self.queue.next_rid(), tokens=tokens,
                       max_new=max_new, enc_embeds=enc_embeds,
+                      budget_new=budget_new,
                       arrival_s=self.clock() if arrival_s is None
                       else arrival_s)
         if not self._fits(req):
@@ -419,19 +553,32 @@ class ServeScheduler:
 
     def _fits(self, req: Request) -> bool:
         """Can this request ever be placed.  Dense: a prompt bucket exists
-        and prompt + budget stay inside the per-slot cache.  Paged: its
-        lifetime page reservation fits the per-slot table width and the
-        pool (transient exhaustion is NOT a rejection — the request waits
-        for retirements; this check is only the never-fits test)."""
+        and prompt + declared budget stay inside the per-slot cache.
+        Paged: its declared-budget page reservation fits the per-slot table
+        width and the pool (transient exhaustion is NOT a rejection — the
+        request waits for retirements; this check is only the never-fits
+        test)."""
+        cap = req.declared_new
         if self.paged:
-            if len(req.tokens) + req.max_new > self.engine.max_len:
+            if len(req.tokens) + cap > self.engine.max_len:
                 return False
-            need = self.engine.pages_needed(len(req.tokens), req.max_new)
+            need = self.engine.pages_needed(len(req.tokens), cap)
+            pool_need = need
+            if self.demand:
+                # livelock guard: a resume re-prefills up to prompt +
+                # max_new - 1 tokens, whose padded chunk span can exceed the
+                # lifetime reservation by up to one chunk bucket — the
+                # request is only admissible if its worst-case resume (plus
+                # the admission watermark) still fits the pool, or a
+                # preempted request could be deferred forever
+                need = max(need, self.engine.pages_needed(
+                    len(req.tokens) + max(cap - 1, 0), 1))
+                pool_need = need + self.allocator.watermark
             return (need <= self.engine.max_pages
-                    and need <= self.allocator.num_pages
+                    and pool_need <= self.allocator.num_pages
                     - self.allocator.n_reserved)
         return (self._bucket_len(len(req.tokens)) is not None
-                and len(req.tokens) + req.max_new <= self.engine.max_len)
+                and len(req.tokens) + cap <= self.engine.max_len)
 
     def _bucket_len(self, n: int) -> int | None:
         for b in self.buckets:
@@ -455,6 +602,8 @@ class ServeScheduler:
             self.engine.ensure_batch()
         logits = self.engine.insert(slot, padded, true_len=S,
                                     enc_embeds=req.enc_embeds)
+        self._admit_seq += 1
+        self.slots[slot].admit_seq = self._admit_seq
         self._first_token(self.slots[slot], req, logits)
 
     def _first_token(self, st: SlotState, req: Request, logits) -> None:
@@ -474,11 +623,28 @@ class ServeScheduler:
     def _start_prefill(self, req: Request, slot: int,
                        page_ids: list[int]) -> None:
         """Paged path: record the chunk plan; chunks run one per ``step()``
-        (interleaved with live-batch decode) via ``_advance_prefill``."""
+        (interleaved with live-batch decode) via ``_advance_prefill``.
+
+        A resumed request (preempted earlier, generated tokens retained in
+        ``_suspended``) re-prefills prompt + all-but-the-last retained token
+        through the SAME per-bucket chunk programs — the last retained token
+        was never fed to decode, so it becomes ``next_token`` again once the
+        KV/SSM state is rebuilt."""
         self.engine.ensure_batch()
         st = self.slots[slot]
         st.request, st.page_ids = req, page_ids
-        st.pending_chunks = chunk_plan(len(req.tokens),
+        self._admit_seq += 1
+        st.admit_seq = self._admit_seq
+        sus = self._suspended.pop(req.rid, None) if self.demand else None
+        st.resume = sus
+        st.resume_base = len(sus.tokens) if sus else 0
+        if sus:
+            st.prefill_tokens = np.concatenate(
+                [req.tokens, np.asarray(sus.tokens[:-1], np.int32)])
+            self.resume_tokens_recomputed += len(st.prefill_tokens)
+        else:
+            st.prefill_tokens = req.tokens
+        st.pending_chunks = chunk_plan(len(st.prefill_tokens),
                                        self.engine.chunk_len,
                                        self.engine.chunk_buckets)
         st.tokens, st.token_s, st.finished = [], [], False
@@ -486,16 +652,50 @@ class ServeScheduler:
     def _advance_prefill(self, st: SlotState) -> None:
         """Run the next chunk of a mid-prefill slot; on the final chunk,
         commit the slot's pages into the live page table and sample the
-        first token."""
+        first token (fresh request) or restore the retained generation state
+        (resume — the final chunk's logits were already sampled once, before
+        the preemption, so they are discarded)."""
         start, bucket, valid = st.pending_chunks.pop(0)
-        toks = st.request.tokens
+        toks = st.prefill_tokens
         ck = np.zeros((1, bucket), np.int32)
         ck[0, :valid] = toks[start:start + valid]
         logits = self.engine.prefill_chunk(st.slot, ck, st.page_ids, start,
                                            valid)
         if not st.pending_chunks:
             self.engine.commit_slot(st.slot, st.page_ids)
-            self._first_token(st, st.request, logits)
+            if st.resume is not None:
+                self._finish_resume(st)
+            else:
+                self._first_token(st, st.request, logits)
+
+    def _finish_resume(self, st: SlotState) -> None:
+        """Final resume chunk done: the cache again holds prompt +
+        generated[:-1], exactly the state at preemption.  Restore the
+        host-side bookkeeping; the next decode step feeds the last retained
+        token as if the preemption never happened."""
+        sus, req = st.resume, st.request
+        st.resume = None
+        st.tokens = list(sus.tokens)
+        st.token_s = list(sus.token_s)
+        st.pos = len(req.tokens) + len(st.tokens)
+        st.budget = req.max_new - len(st.tokens)
+        st.next_token = st.tokens[-1]
+        st.finished = False
+
+    def _admission_pages(self, req: Request) -> int:
+        """Pages the head request needs to be admitted.  Lifetime: the full
+        prompt + DECLARED budget reservation (it cannot know the realised
+        length up front).  Demand: the (padded) prefill span of prompt +
+        retained tokens plus room for the first decode write — every
+        admission is then guaranteed at least one token of progress before
+        it can possibly self-preempt, which is what makes the
+        preempt/resume loop terminate."""
+        if not self.demand:
+            return self.engine.pages_needed(len(req.tokens),
+                                            req.declared_new)
+        sus = self._suspended.get(req.rid)
+        prefill_len = len(req.tokens) + (len(sus.tokens) - 1 if sus else 0)
+        return self.engine.pages_needed(prefill_len, 1)
 
     def _fill_free_slots(self) -> None:
         """Admit a wave: pull queued requests while slots (dense) or slots +
@@ -504,7 +704,10 @@ class ServeScheduler:
         (paged).  Paged admission is FIFO: when the pool cannot cover the
         head request's reservation, filling stops until retirements free
         pages (no smaller request overtakes — no starvation of long
-        prompts)."""
+        prompts).  Under reserve-on-demand an exhausted pool may instead
+        preempt one running victim for the head request — never more than
+        one, and only when the victim's pages actually cover the shortfall
+        (anti-thrash guard)."""
         free = [s.slot for s in self.slots if s.free]
         wave: list[tuple[Request, list[int] | None]] = []
         while len(wave) < len(free) and len(self.queue):
@@ -514,9 +717,24 @@ class ServeScheduler:
                 continue
             pages = None
             if self.paged:
-                pages = self.allocator.alloc(
-                    self.engine.pages_needed(len(req.tokens), req.max_new))
+                need = self._admission_pages(req)
+                pages = self.allocator.admit(need)
+                if (pages is None and self.demand
+                        and req.rid in self._suspended):
+                    # only a RESUME may preempt to admit: it already earned
+                    # its place once and sits at the queue front, so letting
+                    # it displace a lesser-progressed runner prevents
+                    # starvation — whereas fresh arrivals preempting grown
+                    # runners is the recompute-thrash spiral (they wait for
+                    # retirements instead, like any FIFO admission)
+                    victim = self._choose_victim(
+                        shortfall=need + self.allocator.watermark
+                        - self.allocator.n_free)
+                    if victim is not None:
+                        self._preempt(victim)
+                        pages = self.allocator.admit(need)
                 if pages is None:        # pool exhausted: wait, don't shed
+                    self.n_admit_deferred += 1
                     self.queue.push_front(req)
                     break
             wave.append((req, pages))
@@ -532,6 +750,89 @@ class ServeScheduler:
                 self._start_prefill(req, slot, pages)
             else:
                 self._insert(req, slot)
+
+    # -- reserve-on-demand: preemption -----------------------------------------
+    def _floor_ok(self, st: SlotState) -> bool:
+        """Resume-progress floor: a resumed request is not a preemption
+        victim again until it has generated ``resume_floor`` NEW tokens."""
+        return (st.resume_base == 0
+                or len(st.tokens) - st.resume_base >= self.resume_floor)
+
+    def _choose_victim(self, *, shortfall: int = 1) -> SlotState | None:
+        """Pick the lowest-priority running slot to preempt, or None.
+
+        Candidates are live decoding slots (mid-prefill slots hold work
+        nothing has been sampled from yet).  Policy ``fewest``: fewest
+        generated tokens — the cheapest recompute — with LIFO (latest
+        admitted) as the tiebreak; ``lifo``: latest admitted outright.
+        Guards: the victim's pages must actually cover ``shortfall`` (the
+        pages still missing after the free pool — preempting someone and
+        STILL failing the allocation is pure thrash), and the victim must
+        pass the resume-progress floor.  When no slot is eligible, the
+        caller that cannot proceed without a page self-preempts
+        (``_ensure_decode_pages``) — the one case that overrides the
+        floor, since the alternative is a write into an unowned page."""
+        cands = [s for s in self.slots
+                 if s.request is not None and not s.prefilling
+                 and not s.finished and self._floor_ok(s)
+                 and len(s.page_ids) >= shortfall]
+        if not cands:
+            return None
+        if self.preempt_policy == "lifo":
+            return max(cands, key=lambda s: s.admit_seq)
+        return min(cands, key=lambda s: (len(s.tokens), -s.admit_seq))
+
+    def _suspend(self, st: SlotState) -> None:
+        """Record the slot's generated tokens as the resume state of its
+        request (preemption, or worker failure under demand mode)."""
+        prev = self._suspended.get(st.request.rid)
+        self._suspended[st.request.rid] = _Suspended(
+            tokens=list(st.tokens), token_s=list(st.token_s),
+            n_preempts=(prev.n_preempts + 1 if prev else 1))
+
+    def _preempt(self, st: SlotState) -> None:
+        """Reclaim the slot's pages: retain the generated tokens host-side,
+        free the pages (the slot parks on the trash page) and put the
+        request back at the queue FRONT so it resumes — by chunked
+        re-prefill — as soon as pages free up."""
+        req = st.request
+        self._suspend(st)
+        self.n_preempted += 1
+        if self.tracker is not None:
+            self.tracker.preempt(req)
+        self._release_slot(st)
+        st.request, st.finished = None, False
+        st.tokens, st.token_s, st.pending_chunks = [], [], []
+        st.resume, st.resume_base, st.prefill_tokens = None, 0, None
+        self.queue.push_front(req)
+
+    def _ensure_decode_pages(self, live: list[SlotState]) -> list[SlotState]:
+        """Reserve-on-demand: before the decode step, make sure every live
+        slot owns the page its next KV write lands in (write index =
+        ``pos - 1``), appending from the pool at page boundaries.  On
+        exhaustion the victim policy picks who loses their pages; the
+        appending slot is an ordinary candidate when eligible, and the
+        forced fallback — floor notwithstanding — when no slot is (it
+        cannot decode without the page).  Returns the slots that still
+        hold a live request."""
+        ps = self.engine.page_size
+        # most-progressed slots claim free pages first: if the pool is
+        # short, the policy wants the LEAST progressed slot to lose — this
+        # order avoids append-then-get-preempted churn within one step
+        order = sorted(live, key=lambda s: (-len(s.tokens), s.admit_seq))
+        for st in order:
+            while (st.request is not None
+                   and st.pos - 1 >= len(st.page_ids) * ps):
+                pg = self.allocator.alloc(1)
+                if pg is not None:
+                    st.page_ids.append(pg[0])
+                    self.engine.append_page(st.slot, pg[0])
+                    continue
+                victim = self._choose_victim()
+                if victim is None:
+                    victim = st          # floor protects only from OTHERS
+                self._preempt(victim)
+        return [s for s in live if s.request is not None]
 
     def _release_slot(self, st: SlotState) -> None:
         """Hand the slot's pages back to the pool and point its page-table
@@ -558,19 +859,31 @@ class ServeScheduler:
             self._release_slot(st)
             st.request = None
             st.finished = False
+            st.resume, st.resume_base, st.prefill_tokens = None, 0, None
 
     def fail_slot(self, slot: int) -> int | None:
-        """Simulate losing a slot's device-local KV (worker failure).  The
-        in-flight request restarts from its prompt (the retained cache is
-        gone — there is nothing to resume from); returns its rid."""
+        """Simulate losing a slot's device-local KV (worker failure).  Under
+        full-lifetime reservation the in-flight request restarts from its
+        prompt; under reserve-on-demand the generated tokens live host-side
+        anyway (the preemption path retains them), so recovery reuses the
+        resume machinery — the request recomputes prompt + retained tokens
+        instead of regenerating from scratch.  Returns the rid."""
         st = self.slots[slot]
         req, rid = st.request, (st.request.rid if st.request else None)
         if self.tracker is not None:
             self.tracker.fail(slot, rid=rid)
+        if (self.demand and req is not None and st.tokens
+                and not st.prefilling and not st.finished):
+            self._suspend(st)
+        elif self.demand and req is not None and st.resume is not None:
+            # failed mid-resume-prefill: the retained tokens are still the
+            # suspended record — put it back for the next resume attempt
+            self._suspended[req.rid] = st.resume
         self._release_slot(st)
         if req is not None:
             st.request, st.finished = None, False
             st.tokens, st.token_s, st.pending_chunks = [], [], []
+            st.resume, st.resume_base, st.prefill_tokens = None, 0, None
             self.queue.push_front(req)
         return rid
 
@@ -592,9 +905,13 @@ class ServeScheduler:
         self._retire_finished()          # budget-1 requests end at prefill
         live = [s for s in self.slots
                 if s.request is not None and not s.prefilling]
+        if self.demand and live:
+            # reserve-on-demand: appends (or preemptions) BEFORE the decode
+            # write that would cross into an unowned page
+            live = self._ensure_decode_pages(live)
         prefilling = [s for s in self.slots if s.prefilling]
         if not live:
-            return bool(prefilling)
+            return bool(prefilling) or len(self.queue) > 0
         t0 = self.clock()
         tokens = np.zeros((self.engine.batch, 1), np.int32)
         for st in live:
@@ -662,11 +979,18 @@ class ServeScheduler:
         if any(not s.free for s in self.slots) or len(self.queue):
             raise RuntimeError("reset_metrics() with requests still in "
                                "flight")
+        if self._suspended:
+            raise RuntimeError(f"reset_metrics() with suspended requests "
+                               f"{sorted(self._suspended)} — preempted "
+                               f"requests must resume before the drain")
         self.results = []
         self.n_steps = 0
         self.occupied_slot_steps = 0
         self.queue.n_submitted = 0
         self.queue.n_rejected = 0
+        self.n_preempted = 0
+        self.n_admit_deferred = 0
+        self.resume_tokens_recomputed = 0
 
     # -- metrics ---------------------------------------------------------------
     @property

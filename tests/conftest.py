@@ -31,6 +31,17 @@ if "REPRO_TUNE_CACHE" not in os.environ:
 try:
     import hypothesis  # noqa: F401  (real library available — shim not needed)
 except ImportError:
+    # CI must NEVER run on the shim: it silently degrades property tests to
+    # a fixed deterministic example loop, so a green CI would overstate the
+    # suite's coverage.  requirements-dev.txt installs the real library;
+    # failing collection here makes a broken install loud.  Bare local runs
+    # (no hypothesis, no CI env) keep the shim below.
+    if os.environ.get("CI"):
+        raise ImportError(
+            "hypothesis is not installed but CI=1: the tests/conftest.py "
+            "fallback shim would silently degrade property tests to "
+            "single-stream sampled examples. Install requirements-dev.txt "
+            "(pip install -r requirements-dev.txt).")
     import functools
     import inspect
     import random

@@ -1,0 +1,88 @@
+"""Tests for ``benchmarks/compare.py`` (the BENCH-json differ CI leans on):
+threshold exit codes, NaN-aware rows, missing-row handling, and schema
+drift — a differ that crashes or silently passes on malformed input is
+worse than no differ."""
+import json
+import math
+
+import pytest
+
+from benchmarks import compare
+
+
+def _bench(path, rows, schema_version=1):
+    doc = {"schema_version": schema_version, "rows": rows}
+    path.write_text(json.dumps(doc))
+    return str(path)
+
+
+def _row(name, median_s, **extra):
+    r = {"name": name, "backend": "cpu", "shape": [4, 8], "dtype": "int32",
+         "median_s": median_s}
+    if median_s is None:
+        del r["median_s"]
+    r.update(extra)
+    return r
+
+
+def test_identical_files_exit_zero(tmp_path, capsys):
+    base = _bench(tmp_path / "a.json", [_row("k", 1e-3), _row("j", 2e-3)])
+    assert compare.main([base, base]) == 0
+    assert "no regression" in capsys.readouterr().out
+
+
+def test_threshold_exit_codes(tmp_path, capsys):
+    base = _bench(tmp_path / "a.json", [_row("k", 1e-3)])
+    new = _bench(tmp_path / "b.json", [_row("k", 1.2e-3)])  # +20%
+    assert compare.main([base, new, "--threshold", "10"]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+    assert compare.main([base, new, "--threshold", "25"]) == 0
+    # improvements never fail, whatever the magnitude
+    faster = _bench(tmp_path / "c.json", [_row("k", 1e-4)])
+    assert compare.main([base, faster, "--threshold", "10"]) == 0
+    assert "improved" in capsys.readouterr().out
+
+
+def test_missing_rows_reported_but_never_fail(tmp_path, capsys):
+    base = _bench(tmp_path / "a.json", [_row("old", 1e-3), _row("k", 1e-3)])
+    new = _bench(tmp_path / "b.json", [_row("new", 2e-3), _row("k", 1e-3)])
+    assert compare.main([base, new, "--threshold", "10"]) == 0
+    out = capsys.readouterr().out
+    assert "(row removed)" in out and "(new row)" in out
+
+
+def test_nan_baseline_skipped_nan_new_regresses(tmp_path, capsys):
+    nan = float("nan")
+    base = _bench(tmp_path / "a.json",
+                  [_row("sick_base", nan), _row("zero_base", 0.0),
+                   _row("sick_new", 1e-3)])
+    new = _bench(tmp_path / "b.json",
+                 [_row("sick_base", 1e-3), _row("zero_base", 1e-3),
+                  _row("sick_new", nan)])
+    assert compare.main([base, new]) == 1      # NEW NaN = broken run
+    out = capsys.readouterr().out
+    assert out.count("baseline median unusable, skipped") == 2
+    assert "NEW median is NaN" in out
+    # sanity: json round-trips the NaN we think it does
+    assert math.isnan(json.load(open(new))["rows"][2]["median_s"])
+
+
+def test_schema_drift_no_rows_key_is_fatal(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"schema_version": 1, "medians": []}))
+    good = _bench(tmp_path / "good.json", [_row("k", 1e-3)])
+    with pytest.raises(SystemExit, match="not a BENCH file"):
+        compare.main([str(bad), good])
+
+
+def test_schema_drift_row_without_median_regresses(tmp_path, capsys):
+    """A row that lost its median_s (schema drift in a generator) must be
+    flagged as a regression, not crash the differ or silently pass."""
+    base = _bench(tmp_path / "a.json", [_row("k", 1e-3)])
+    new = _bench(tmp_path / "b.json", [_row("k", None, note="drifted")])
+    assert compare.main([base, new]) == 1
+    assert "schema drift" in capsys.readouterr().out
+    # and a brand-new row without median_s is reported, exit 0
+    extra = _bench(tmp_path / "c.json",
+                   [_row("k", 1e-3), _row("fresh", None)])
+    assert compare.main([base, extra]) == 0

@@ -18,7 +18,13 @@ the CLI):
   reservation (which must defer admissions) against reserve-on-demand +
   vLLM-style preemption at equal pool bytes — extras ``preempt_count``,
   ``resume_tokens_recomputed`` and ``speedup_vs_lifetime_pct``
-  (DESIGN.md §10).  A paged insert is ONE chunk-prefill call writing
+  (DESIGN.md §10).
+* the **shared-prefix trace** (every prompt opens with the same system
+  prefix): ``serve_prefix_cache`` compares the paged engine with prefix
+  caching + copy-on-write page sharing on vs off at equal pool bytes —
+  a cache hit's admission prefills only the tail chunk, so the row's
+  ``ttft_p50_s``/``ttft_p95_s`` undercut the no-cache references; extras
+  ``prefix_hit_rate``, ``pages_shared``, ``cow_copies`` (DESIGN.md §11).  A paged insert is ONE chunk-prefill call writing
   straight into the slot's pages, vs the dense trio (fresh mini-cache +
   bucket-padded prefill + whole-cache splice), at equal decode cost —
   the measured tok/s and TTFT-tail edge.  Paged rows carry
@@ -68,6 +74,8 @@ class _Args:
     preempt_policy: str = "fewest"
     admit_watermark: int = 0
     max_new_mix: tuple | None = None
+    prefix_cache: bool = False
+    shared_prefix_len: int = 0
 
 
 def _smoke_args():
@@ -100,6 +108,21 @@ def _full_mixed():
                 page_size=16, prefill_chunk=128)
 
 
+def _smoke_prefix():
+    # the system-prompt workload: every prompt opens with the same 64-token
+    # prefix (4 pages, 2 chunks) followed by a random remainder.  With the
+    # cache on, a hit's admission prefills ONLY the tail chunk (1 x 32 vs
+    # 3 x 32 chunks for 80-96-token prompts) — the ttft_p50/p95 edge the
+    # acceptance row asserts, at equal pool bytes
+    return dict(batch=8, n_requests=24, max_new=16, prompt_lens=(80, 96),
+                page_size=16, prefill_chunk=32, shared_prefix_len=64)
+
+
+def _full_prefix():
+    return dict(batch=8, n_requests=48, max_new=32, prompt_lens=(160, 192),
+                page_size=16, prefill_chunk=64, shared_prefix_len=128)
+
+
 def _smoke_constrained():
     # the preemption trace: clients declare a 64-token cap but realised
     # lengths average ~30 (the max_new_mix), so full-lifetime reservation
@@ -123,14 +146,18 @@ def _make_args(engine: str, *, batch, n_requests, max_new, prompt_lens,
                prefill_chunk: int = 64, reserve: str = "lifetime",
                preempt_policy: str = "fewest",
                admit_watermark: int = 0,
-               max_new_mix: tuple | None = None) -> _Args:
+               max_new_mix: tuple | None = None,
+               prefix_cache: bool = False,
+               shared_prefix_len: int = 0) -> _Args:
     return _Args(engine=engine, batch=batch, strategy="greedy",
                  prompt_lens=tuple(prompt_lens), max_pending=None,
                  n_requests=n_requests, rate=rate_per_s, max_new=max_new,
                  seed=seed, paged=paged, page_size=page_size,
                  num_pages=num_pages, prefill_chunk=prefill_chunk,
                  reserve=reserve, preempt_policy=preempt_policy,
-                 admit_watermark=admit_watermark, max_new_mix=max_new_mix)
+                 admit_watermark=admit_watermark, max_new_mix=max_new_mix,
+                 prefix_cache=prefix_cache,
+                 shared_prefix_len=shared_prefix_len)
 
 
 def run_engine(engine: str, *, cfg, params, repeats: int = 1, **kw) -> dict:
@@ -264,4 +291,37 @@ def run(smoke: bool = False) -> list[dict]:
         * 100.0 if lt["tok_per_s"] else 0.0,
         chunk_traces=s["trace_counts"]["chunk_prefill"],
         decode_traces=s["trace_counts"]["decode"]))
+
+    # -- shared-prefix trace: prefix caching + COW page sharing vs the
+    # no-cache paged engine at EQUAL pool bytes (DESIGN.md §11).  Every
+    # prompt repeats the same system prefix; with the cache on, admissions
+    # after the first wave map the prefix onto shared pool pages and
+    # prefill only the tail chunk — lower ttft at the same tok/s budget.
+    pf = _smoke_prefix() if smoke else _full_prefix()
+    pbatch = pf["batch"]
+    pmax_len = max(pf["prompt_lens"]) + pf["max_new"] + 8
+    pf_pages = 1 + pbatch * (-(-pmax_len // pf["page_size"]))
+    pbase = dict(pf, paged=True, num_pages=pf_pages)
+    stats = compare_engines(
+        {"nocache": _make_args("direct", **pbase),
+         "cache": _make_args("direct", **dict(pbase, prefix_cache=True))},
+        cfg=cfg, params=params)
+    nc, pc = stats["nocache"], stats["cache"]
+    rows.append(_row(
+        "serve_prefix_cache", pbatch, pf["max_new"], pc,
+        kv_budget_tokens=(pf_pages - 1) * pf["page_size"],
+        pool_pages=pf_pages, n_slots=pbatch,
+        shared_prefix_len=pf["shared_prefix_len"],
+        prefix_hit_rate=pc["prefix_hit_rate"],
+        pages_shared=pc["pages_shared"],
+        cow_copies=pc["cow_copies"],
+        nocache_tok_per_s=nc["tok_per_s"],
+        nocache_ttft_p50_s=nc["ttft_p50_s"],
+        nocache_ttft_p95_s=nc["ttft_p95_s"],
+        ttft_p50_gain_pct=(nc["ttft_p50_s"] / pc["ttft_p50_s"] - 1.0)
+        * 100.0 if pc["ttft_p50_s"] else 0.0,
+        speedup_vs_nocache_pct=(pc["tok_per_s"] / nc["tok_per_s"] - 1.0)
+        * 100.0 if nc["tok_per_s"] else 0.0,
+        chunk_traces=pc["trace_counts"]["chunk_prefill"],
+        decode_traces=pc["trace_counts"]["decode"]))
     return rows

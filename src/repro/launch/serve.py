@@ -44,7 +44,8 @@ from repro.serve import (Engine, HyParRequestTracker, PagedEngine, Request,
 
 def build_trace(rng: np.random.Generator, cfg, *, n_requests: int,
                 rate_per_s: float, prompt_lens: list[int],
-                max_new, budget_new: int | None = None) -> list[Request]:
+                max_new, budget_new: int | None = None,
+                shared_prefix_len: int = 0) -> list[Request]:
     """Open-loop request trace: Poisson arrivals (exponential gaps at
     ``rate_per_s``), prompt lengths drawn uniformly from ``prompt_lens``.
 
@@ -52,14 +53,28 @@ def build_trace(rng: np.random.Generator, cfg, *, n_requests: int,
     request; ``budget_new`` is the declared generation cap clients submit
     alongside (admission must provision for it — full-lifetime reservation
     pays its pages even when the realised length stops far short, which is
-    the over-provisioning reserve-on-demand exists to reclaim)."""
+    the over-provisioning reserve-on-demand exists to reclaim).
+
+    ``shared_prefix_len`` > 0 makes every prompt open with the SAME token
+    prefix (a system prompt) followed by a random remainder — the workload
+    shape prefix caching exists for."""
     t = 0.0
     mix = [int(m) for m in np.atleast_1d(max_new)]
+    prefix = None
+    if shared_prefix_len > 0:
+        if min(prompt_lens) <= shared_prefix_len:
+            raise ValueError(f"every prompt length {tuple(prompt_lens)} must "
+                             f"exceed shared_prefix_len {shared_prefix_len} "
+                             f"(each prompt = prefix + random remainder)")
+        prefix = rng.integers(0, cfg.vocab_size - 1,
+                              (shared_prefix_len,)).astype(np.int32)
     reqs = []
     for rid in range(n_requests):
         t += rng.exponential(1.0 / rate_per_s) if rate_per_s > 0 else 0.0
         S = int(rng.choice(prompt_lens))
         toks = rng.integers(0, cfg.vocab_size - 1, (S,)).astype(np.int32)
+        if prefix is not None:
+            toks = np.concatenate([prefix, toks[shared_prefix_len:]])
         enc = None
         if cfg.family == "encdec":
             enc = jnp.asarray(rng.standard_normal(
@@ -108,7 +123,8 @@ def make_scheduler(cfg, params, args, *, sp: SamplingParams,
                           reserve=getattr(args, "reserve", "lifetime"),
                           preempt_policy=getattr(args, "preempt_policy",
                                                  "fewest"),
-                          admit_watermark=getattr(args, "admit_watermark", 0))
+                          admit_watermark=getattr(args, "admit_watermark", 0),
+                          prefix_cache=getattr(args, "prefix_cache", False))
 
 
 def prepare_trace(cfg, params, args, *, sp: SamplingParams):
@@ -128,7 +144,9 @@ def prepare_trace(cfg, params, args, *, sp: SamplingParams):
     reqs = build_trace(rng, cfg, n_requests=args.n_requests,
                        rate_per_s=args.rate, prompt_lens=list(args.prompt_lens),
                        max_new=(mix if mix else args.max_new),
-                       budget_new=(args.max_new if mix else None))
+                       budget_new=(args.max_new if mix else None),
+                       shared_prefix_len=getattr(args, "shared_prefix_len",
+                                                 0))
     warm_lens = list(args.prompt_lens)
     if getattr(sched, "demand", False):
         # resume re-prefills (prompt + retained tokens) land in arbitrary
@@ -138,6 +156,11 @@ def prepare_trace(cfg, params, args, *, sp: SamplingParams):
                       if b + 2 <= sched.engine.max_len]
     sched.run(warmup_requests(rng, cfg, prompt_lens=warm_lens))
     sched.reset_metrics()
+    if getattr(sched, "prefix", None) is not None:
+        # drop the warmup prompts' cache entries (and their held pages):
+        # measured replays start from a cold cache and earn their hits from
+        # the trace's own shared prefixes
+        sched.flush_prefix_cache()
     return sched, reqs
 
 
@@ -156,7 +179,8 @@ def replay_trace(sched, reqs) -> tuple:
     # them on the scheduler, so trace_stats cannot read them post hoc
     snap = (rate, results, wall, sched.occupancy, sched.queue.n_rejected,
             sched.n_preempted, sched.resume_tokens_recomputed,
-            sched.n_admit_deferred)
+            sched.n_admit_deferred, sched.n_prefix_lookups,
+            sched.n_prefix_hits, sched.pages_shared, sched.n_cow_copies)
     sched.reset_metrics()              # also clears occupancy + counters
     return snap
 
@@ -178,7 +202,8 @@ def run_trace(cfg, params, args, *, sp: SamplingParams,
 def trace_stats(args, sched, snap) -> dict:
     """Build the stats dict from the best replay snapshot."""
     (_, results, wall, occupancy, n_rejected,
-     n_preempted, resume_recomputed, n_deferred) = snap
+     n_preempted, resume_recomputed, n_deferred,
+     n_lookups, n_hits, pages_shared, cow_copies) = snap
     n_tok = sum(r.n_generated for r in results)
     # NaN, not 0.0, when nothing completed: a broken/all-shed run must not
     # record perfect-looking latencies into the BENCH trajectory
@@ -212,6 +237,10 @@ def trace_stats(args, sched, snap) -> dict:
         "preempt_count": n_preempted,
         "resume_tokens_recomputed": resume_recomputed,
         "admit_deferred": n_deferred,
+        "prefix_cache": sched.prefix_cache_active,
+        "prefix_hit_rate": (n_hits / n_lookups if n_lookups else 0.0),
+        "pages_shared": pages_shared,
+        "cow_copies": cow_copies,
     }
     return stats
 
@@ -313,6 +342,13 @@ def main(argv=None):
     ap.add_argument("--admit-watermark", type=int, default=0,
                     help="demand: free pages held back from admissions as "
                          "decode-append headroom")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged: share cache-hit prompt prefixes across "
+                         "slots (copy-on-write pages)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="trace mode: every prompt opens with the same "
+                         "token prefix of this length (system-prompt "
+                         "workload; pairs with --prefix-cache)")
     args = ap.parse_args(argv)
     if args.paged and not args.trace:
         ap.error("--paged requires --trace (wave mode is dense-only)")
@@ -320,6 +356,11 @@ def main(argv=None):
         ap.error("--reserve demand requires --paged")
     if args.admit_watermark and args.reserve != "demand":
         ap.error("--admit-watermark requires --reserve demand")
+    if args.prefix_cache and not args.paged:
+        ap.error("--prefix-cache requires --paged (dense slots have no "
+                 "pages to share)")
+    if args.shared_prefix_len and not args.trace:
+        ap.error("--shared-prefix-len requires --trace")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     from repro.models.transformer import init_params
@@ -339,6 +380,10 @@ def main(argv=None):
                   f"resume_tokens_recomputed="
                   f"{stats['resume_tokens_recomputed']} "
                   f"admit_deferred={stats['admit_deferred']}")
+        if stats["prefix_cache"]:
+            print(f"prefix_cache: hit_rate={stats['prefix_hit_rate']*100:.0f}% "
+                  f"pages_shared={stats['pages_shared']} "
+                  f"cow_copies={stats['cow_copies']}")
         print(f"tok/s={stats['tok_per_s']:.1f} "
               f"ttft p50={stats['ttft_p50_s']*1e3:.1f}ms "
               f"p95={stats['ttft_p95_s']*1e3:.1f}ms "

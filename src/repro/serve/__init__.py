@@ -1,5 +1,6 @@
 from .engine import (Engine, PagedEngine, SamplingParams, chunk_buckets_for,
                      chunk_plan, count_generated)
+from .prefix import PrefixCache
 from .scheduler import (DEFAULT_BUCKETS, HyParRequestTracker, PageAllocator,
                         Request, RequestQueue, RequestResult, ServeScheduler,
                         SlotState)
@@ -8,6 +9,6 @@ __all__ = [
     "Engine", "PagedEngine", "SamplingParams", "count_generated",
     "chunk_plan", "chunk_buckets_for",
     "Request", "RequestResult", "RequestQueue", "SlotState",
-    "ServeScheduler", "HyParRequestTracker", "PageAllocator",
+    "ServeScheduler", "HyParRequestTracker", "PageAllocator", "PrefixCache",
     "DEFAULT_BUCKETS",
 ]

@@ -280,14 +280,27 @@ def chunk_buckets_for(prefill_chunk: int, page_size: int) -> tuple[int, ...]:
 
 
 def chunk_plan(true_len: int, prefill_chunk: int,
-               buckets: Sequence[int]) -> list[tuple[int, int, int]]:
+               buckets: Sequence[int], *,
+               start: int = 0) -> list[tuple[int, int, int]]:
     """Split a prompt into page-aligned chunks: full ``prefill_chunk``-sized
     chunks, then the remainder padded up to the smallest fitting bucket.
-    Returns ``[(start, bucket_len, valid_in_chunk), ...]``."""
+    Returns ``[(start, bucket_len, valid_in_chunk), ...]``.
+
+    ``start`` (a chunk-aligned offset, prefix-cache hits) begins the plan at
+    a later position; because full chunks are laid at multiples of
+    ``prefill_chunk``, the result is exactly the suffix of the ``start=0``
+    plan — the bit-exactness contract prefix sharing relies on (the final
+    chunk, whose logits seed the first sampled token, is identical to the
+    one a full prefill would run)."""
     if true_len <= 0:
         raise ValueError(f"true_len {true_len} must be positive")
+    if not 0 <= start < true_len:
+        raise ValueError(f"start {start} outside [0, {true_len})")
+    if start % prefill_chunk:
+        raise ValueError(f"start {start} must be chunk-aligned "
+                         f"(prefill_chunk {prefill_chunk}) so the plan is a "
+                         f"suffix of the full-prefill plan")
     plan = []
-    start = 0
     while true_len - start > prefill_chunk:
         plan.append((start, prefill_chunk, prefill_chunk))
         start += prefill_chunk
@@ -349,6 +362,12 @@ class PagedEngine:
         self._trace_counts: collections.Counter = collections.Counter()
         # host-side page table; all-zero rows = trash page (slot empty)
         self.page_table = np.zeros((batch, self.max_pages), np.int32)
+        # prefix caching shares pages between slots, which only the paged
+        # attention pools support: SSM layers keep per-SLOT dense state that
+        # a chunk prefill rebuilds position by position — there is no page
+        # of it to hand a second request
+        plan = layer_plan(cfg)
+        self.supports_prefix_cache = "ssm" not in plan.pattern + plan.tail
 
         def _decode(params, cache, tokens, page_table, update_mask):
             self._trace_counts["decode"] += 1
@@ -362,9 +381,32 @@ class PagedEngine:
                                       pages_row=pages_row,
                                       page_size=page_size)
 
+        def _copy(cache, src, dst):
+            self._trace_counts["copy_page"] += 1
+
+            def cp_block(bc, axis):
+                # attention pool blocks only — SSM blocks hold per-slot
+                # state, no pages to copy (cf. _page_view_block)
+                if not (isinstance(bc, dict) and "self" in bc):
+                    return bc
+
+                def cp(pool):
+                    blk = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=axis)
+                    return jax.lax.dynamic_update_slice_in_dim(pool, blk, dst,
+                                                               axis=axis)
+
+                return {**bc,
+                        "self": {k: cp(v) for k, v in bc["self"].items()}}
+
+            return {"groups": [cp_block(bc, 1) for bc in cache["groups"]],
+                    "tail": [cp_block(bc, 0) for bc in cache["tail"]],
+                    "len": cache["len"]}
+
         donate = (1,) if donate_cache else ()
         self._decode = jax.jit(_decode, donate_argnums=donate)
         self._chunk = jax.jit(_chunk, donate_argnums=donate)
+        self._copy = jax.jit(_copy, donate_argnums=(0,) if donate_cache
+                             else ())
         # device copy of the page table, refreshed only when a slot commits
         # or frees — decode steps between table changes reuse it instead of
         # paying a host->device transfer per step
@@ -411,20 +453,36 @@ class PagedEngine:
         full allocation, host list).  Returns the logits at the chunk's true
         last token — only the final chunk's are meaningful."""
         self.ensure_batch()
-        if len(page_ids) > self.max_pages:
-            raise ValueError(f"{len(page_ids)} pages exceed the per-slot "
-                             f"table width {self.max_pages}")
+        ids = self._check_page_row(slot, page_ids)
         row = np.zeros((1, self.max_pages), np.int32)
-        row[0, :len(page_ids)] = page_ids
+        row[0, :len(ids)] = ids
         logits, self.cache = self._chunk(self.params, self.cache, tokens_1xC,
                                          row, slot, start, valid_in_chunk)
         return logits
 
+    def _check_page_row(self, slot: int, page_ids) -> list[int]:
+        """Fail fast on a bad table row: the trash page (id 0) mid-row would
+        silently truncate the nonzero-prefix page count ``append_page``
+        depends on (a later append would overwrite a live mapping), an
+        out-of-range id would index the pool out of bounds on device, and an
+        over-long row would overflow the per-slot table width."""
+        ids = [int(p) for p in page_ids]
+        if len(ids) > self.max_pages:
+            raise ValueError(f"slot {slot}: {len(ids)} pages exceed the "
+                             f"per-slot table width {self.max_pages}")
+        bad = [p for p in ids if not 0 < p < self.num_pages]
+        if bad:
+            raise ValueError(f"slot {slot}: page id(s) {bad} outside "
+                             f"(0, {self.num_pages}) — 0 is the reserved "
+                             f"trash page")
+        return ids
+
     def commit_slot(self, slot: int, page_ids) -> None:
         """Install the slot's pages into the live table — decode reads (and
         writes) go through them from the next step on."""
+        ids = self._check_page_row(slot, page_ids)
         row = np.zeros((self.max_pages,), np.int32)
-        row[:len(page_ids)] = page_ids
+        row[:len(ids)] = ids
         self.page_table[slot] = row
         self._pt_device = None
 
@@ -437,6 +495,10 @@ class PagedEngine:
         if page_id <= 0:
             raise ValueError(f"page {page_id} is reserved (trash page) or "
                              f"invalid — appends take allocator pages >= 1")
+        if page_id >= self.num_pages:
+            raise ValueError(f"page {page_id} outside the pool "
+                             f"(num_pages {self.num_pages}) — a foreign id "
+                             f"would index the device pool out of bounds")
         n = int(np.count_nonzero(self.page_table[slot]))
         if n == 0:
             raise ValueError(f"slot {slot} is not committed (row on the "
@@ -446,6 +508,36 @@ class PagedEngine:
             raise ValueError(f"slot {slot} table is full "
                              f"({self.max_pages} pages)")
         self.page_table[slot, n] = page_id
+        self._pt_device = None
+
+    def copy_page(self, src: int, dst: int) -> None:
+        """Copy-on-write primitive: duplicate page ``src``'s K/V block into
+        ``dst`` across every attention pool (one jitted program, traced
+        once).  The caller (scheduler) then remaps the writing slot's table
+        row from the shared original to the private copy."""
+        for name, p in (("src", src), ("dst", dst)):
+            if not 0 < p < self.num_pages:
+                raise ValueError(f"copy_page {name} {p} outside "
+                                 f"(0, {self.num_pages})")
+        if src == dst:
+            raise ValueError(f"copy_page onto itself (page {src})")
+        self.ensure_batch()
+        self.cache = self._copy(self.cache, np.int32(src), np.int32(dst))
+
+    def remap_slot_page(self, slot: int, idx: int, page_id: int) -> None:
+        """Replace ONE live table-row entry (COW remap: shared original ->
+        private copy).  Only committed rows can be remapped — a mid-prefill
+        slot's live row is parked on the trash page, and its real row is
+        (re)installed wholesale by ``commit_slot``."""
+        if not 0 < page_id < self.num_pages:
+            raise ValueError(f"page {page_id} outside (0, {self.num_pages})")
+        if not 0 <= idx < self.max_pages:
+            raise ValueError(f"row index {idx} outside [0, {self.max_pages})")
+        if self.page_table[slot, idx] == 0:
+            raise ValueError(f"slot {slot} row index {idx} is not live "
+                             f"(trash page) — remap only swaps existing "
+                             f"mappings")
+        self.page_table[slot, idx] = page_id
         self._pt_device = None
 
     def free_slot(self, slot: int) -> None:

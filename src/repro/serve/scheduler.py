@@ -30,6 +30,7 @@ status) mirrors the engine's per-slot cache lengths — the bookkeeping
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from collections import deque
@@ -44,10 +45,11 @@ from repro.core.scheduler import (CostModelParams, MasterScheduler,
                                   ResultStore, VirtualCluster)
 
 from .engine import Engine, PagedEngine, SamplingParams, chunk_plan
+from .prefix import PrefixCache
 
 __all__ = [
     "Request", "RequestResult", "RequestQueue", "SlotState", "PageAllocator",
-    "ServeScheduler", "HyParRequestTracker", "DEFAULT_BUCKETS",
+    "PrefixCache", "ServeScheduler", "HyParRequestTracker", "DEFAULT_BUCKETS",
 ]
 
 # prompt-length buckets: prompts are right-padded to the next bucket so the
@@ -198,14 +200,21 @@ class _Suspended:
 
 
 class PageAllocator:
-    """Host-side free list over the shared KV page pool.
+    """Host-side free list + per-page reference counts over the shared KV
+    page pool.
 
-    Page 0 is the engine's reserved trash page and is never handed out;
-    every other page is owned by at most one slot at a time (``alloc``
-    tracks outstanding pages and ``free`` refuses double-frees), which is
-    the no-aliasing invariant the paged write paths rely on.  ``alloc``
-    returns ``None`` when the pool cannot cover the request — the admission
-    signal: the request stays queued until retirements free pages.
+    Page 0 is the engine's reserved trash page and is never handed out.
+    Pages come out of ``alloc`` exclusively owned (refcount 1) and may gain
+    further read-only references via :meth:`share` — prefix-cache hits map
+    extra slots (and the cache itself) onto one physical page.  The paged
+    write paths' invariant is therefore **writable iff refcount == 1**: a
+    write into a shared page must copy-on-write first (the scheduler's
+    job).  ``free`` releases one reference per listed page; a page returns
+    to the free list only when its LAST reference drops, so for unshared
+    pages the semantics are exactly the old exclusive ones (including the
+    double-free error).  ``alloc`` returns ``None`` when the pool cannot
+    cover the request — the admission signal: the request stays queued
+    until retirements free pages.
 
     ``watermark`` free pages are held back from *admission* allocations
     (:meth:`admit`): under reserve-on-demand the pool's slack is what decode
@@ -227,7 +236,7 @@ class PageAllocator:
         self.watermark = watermark
         # stack popped from the end => ascending page ids first
         self._free = list(range(num_pages - 1, n_reserved - 1, -1))
-        self._out: set[int] = set()
+        self._ref: dict[int, int] = {}   # outstanding page -> refcount >= 1
 
     @property
     def n_free(self) -> int:
@@ -235,13 +244,23 @@ class PageAllocator:
 
     @property
     def n_outstanding(self) -> int:
-        return len(self._out)
+        return len(self._ref)
 
     @property
     def outstanding(self) -> frozenset[int]:
-        """Snapshot of the pages currently owned by some slot (invariant
-        checks: must equal the union of every slot's ``page_ids``)."""
-        return frozenset(self._out)
+        """Snapshot of the pages currently owned by at least one holder
+        (invariant checks: must equal the union of every slot's
+        ``page_ids`` and the prefix cache's held pages)."""
+        return frozenset(self._ref)
+
+    def refcount(self, page: int) -> int:
+        """References on ``page`` (0 => free / never allocated)."""
+        return self._ref.get(int(page), 0)
+
+    def writable(self, page: int) -> bool:
+        """A page may be written in place only while exactly one reference
+        exists — any write into a shared page must copy-on-write first."""
+        return self._ref.get(int(page), 0) == 1
 
     def alloc(self, n: int) -> list[int] | None:
         if n <= 0:
@@ -249,7 +268,8 @@ class PageAllocator:
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._out.update(pages)
+        for p in pages:
+            self._ref[p] = 1
         return pages
 
     def admit(self, n: int) -> list[int] | None:
@@ -259,13 +279,38 @@ class PageAllocator:
             return None
         return self.alloc(n)
 
-    def free(self, pages: Iterable[int]) -> None:
+    def share(self, pages: Iterable[int]) -> None:
+        """Take one additional (read-only) reference on each outstanding
+        page — a prefix-cache hit mapping a new slot onto shared pages, or
+        the cache itself retaining a retired request's prefix."""
+        pages = [int(p) for p in pages]
+        missing = [p for p in pages if p not in self._ref]
+        if missing:
+            raise ValueError(f"cannot share unallocated page(s) "
+                             f"{sorted(set(missing))}")
         for p in pages:
-            if p not in self._out:
-                raise ValueError(f"page {p} was not allocated (double free "
-                                 f"or foreign page)")
-            self._out.discard(p)
-            self._free.append(p)
+            self._ref[p] += 1
+
+    def free(self, pages: Iterable[int]) -> None:
+        """Release one reference per listed page (a page listed twice
+        releases two).  The WHOLE batch is validated before any mutation:
+        an over-free (more releases than references — double free or
+        foreign page) raises with the allocator untouched, instead of
+        half-freed mid-loop with the conservation invariant broken for the
+        rest of the run."""
+        pages = [int(p) for p in pages]
+        counts = collections.Counter(pages)
+        bad = sorted(p for p, c in counts.items()
+                     if self._ref.get(p, 0) < c)
+        if bad:
+            raise ValueError(f"page(s) {bad} have fewer references than "
+                             f"frees requested (double free or foreign "
+                             f"page); nothing was freed")
+        for p in pages:
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._free.append(p)
 
 
 # ---------------------------------------------------------------------------
@@ -456,6 +501,13 @@ class ServeScheduler:
       back free pages from admissions as append headroom, and
       ``resume_floor`` (default: one page of tokens) keeps a resumed
       request from being re-preempted before it makes progress.
+
+    ``prefix_cache=True`` (paged engines, DESIGN.md §11) additionally maps
+    cache-hit prompt prefixes onto shared pool pages — admission prefills
+    only the remainder (at best one chunk), the allocator refcounts shared
+    pages, and any write into one copy-on-writes first.  Models with SSM
+    layers keep the knob but stay uncached (per-slot dense state has no
+    pages to share).
     """
 
     def __init__(self, engine: Engine, *,
@@ -469,7 +521,8 @@ class ServeScheduler:
                  preempt_policy: str = "fewest",
                  admit_watermark: int = 0,
                  resume_floor: int | None = None,
-                 pool_pages: int | None = None):
+                 pool_pages: int | None = None,
+                 prefix_cache: bool = False):
         if reserve not in ("lifetime", "demand"):
             raise ValueError(f"unknown reserve discipline {reserve!r}")
         if preempt_policy not in ("fewest", "lifo"):
@@ -517,6 +570,19 @@ class ServeScheduler:
             usable = (engine.num_pages if pool_pages is None
                       else min(pool_pages, engine.num_pages))
             self.allocator = PageAllocator(usable, watermark=admit_watermark)
+        # prefix caching (DESIGN.md §11): admission maps a cache-hit prompt
+        # prefix onto SHARED pool pages and prefills only the remainder;
+        # writes into a shared page copy-on-write first.  Requires paged
+        # attention — and silently stays off for models with SSM layers,
+        # whose per-slot dense state has no pages to share (the knob is
+        # accepted so sweeps stay uniform; ``prefix_cache_active`` says
+        # whether sharing is actually on)
+        if prefix_cache and not self.paged:
+            raise ValueError("prefix_cache requires a PagedEngine — dense "
+                             "per-slot caches have no pages to share")
+        self.prefix = (PrefixCache(engine.page_size)
+                       if prefix_cache and engine.supports_prefix_cache
+                       else None)
         self.tracker = tracker
         self.clock = clock
         self._key = key if key is not None else jax.random.PRNGKey(0)
@@ -532,6 +598,15 @@ class ServeScheduler:
         self.n_preempted = 0
         self.n_admit_deferred = 0
         self.resume_tokens_recomputed = 0
+        # prefix-cache counters (bench row extras)
+        self.n_prefix_lookups = 0
+        self.n_prefix_hits = 0
+        self.pages_shared = 0
+        self.n_cow_copies = 0
+
+    @property
+    def prefix_cache_active(self) -> bool:
+        return self.prefix is not None
 
     # -- submission ------------------------------------------------------------
     def submit(self, tokens, max_new: int, *, enc_embeds=None,
@@ -620,33 +695,76 @@ class ServeScheduler:
                               and tok == self.sp.stop_token):
             st.finished = True
 
-    def _start_prefill(self, req: Request, slot: int,
-                       page_ids: list[int]) -> None:
+    def _prefill_stream(self, req: Request) -> np.ndarray:
+        """The token stream an admission would prefill: the prompt, or —
+        resuming a preempted request — prompt + all-but-the-last retained
+        token (the last was never fed to decode and becomes ``next_token``
+        again once the state is rebuilt)."""
+        sus = self._suspended.get(req.rid) if self.demand else None
+        if sus is not None:
+            return np.concatenate(
+                [req.tokens, np.asarray(sus.tokens[:-1], np.int32)])
+        return req.tokens
+
+    def _shared_prefix(self, stream) -> list[int]:
+        """Cache-hit pages usable for this prefill stream, floored to a
+        CHUNK boundary strictly below the stream end.
+
+        The floor is the bit-exactness contract: K/V values are
+        per-position pure functions of the tokens (identical however the
+        prefill was chunked), but a chunk's LOGITS depend on where the
+        cache-block/self-block softmax split falls — so the final chunk,
+        whose logits seed the first sampled token, must be the same chunk a
+        full prefill would run.  Flooring the shared span to a multiple of
+        ``chunk_len`` below the last chunk's start makes the hit plan an
+        exact suffix of the no-cache plan.  A corollary: the serving paths
+        never write into the shared span (prefill resumes at the floor,
+        decode writes land past the stream end), so COW triggers are
+        defensive enforcement of writable-iff-refcount==1, not a steady-
+        state cost."""
+        if self.prefix is None:
+            return []
+        chain = self.prefix.lookup(stream)
+        if not chain:
+            return []
+        ps, C = self.engine.page_size, self.engine.chunk_len
+        last_chunk = (len(stream) - 1) // C      # the reference plan's tail
+        usable_chunks = min((len(chain) * ps) // C, last_chunk)
+        return chain[:usable_chunks * (C // ps)]
+
+    def _start_prefill(self, req: Request, slot: int, page_ids: list[int],
+                       shared: list[int], stream: np.ndarray) -> None:
         """Paged path: record the chunk plan; chunks run one per ``step()``
         (interleaved with live-batch decode) via ``_advance_prefill``.
 
-        A resumed request (preempted earlier, generated tokens retained in
-        ``_suspended``) re-prefills prompt + all-but-the-last retained token
-        through the SAME per-bucket chunk programs — the last retained token
-        was never fed to decode, so it becomes ``next_token`` again once the
-        KV/SSM state is rebuilt."""
+        ``shared`` pages (prefix-cache hit, admission already took the
+        slot's references) cover the head of ``stream``; the chunk plan
+        starts at the shared boundary, so a hit's prefill costs only the
+        remainder — at best one chunk (the non-aligned tail).  A resumed
+        request (preempted earlier, generated tokens retained in
+        ``_suspended``) re-prefills prompt + all-but-the-last retained
+        token through the SAME per-bucket chunk programs."""
         self.engine.ensure_batch()
         st = self.slots[slot]
-        st.request, st.page_ids = req, page_ids
+        st.request, st.page_ids = req, list(shared) + list(page_ids)
         self._admit_seq += 1
         st.admit_seq = self._admit_seq
         sus = self._suspended.pop(req.rid, None) if self.demand else None
         st.resume = sus
         st.resume_base = len(sus.tokens) if sus else 0
+        st.prefill_tokens = stream
+        start = len(shared) * self.engine.page_size
         if sus:
-            st.prefill_tokens = np.concatenate(
-                [req.tokens, np.asarray(sus.tokens[:-1], np.int32)])
-            self.resume_tokens_recomputed += len(st.prefill_tokens)
-        else:
-            st.prefill_tokens = req.tokens
-        st.pending_chunks = chunk_plan(len(st.prefill_tokens),
+            self.resume_tokens_recomputed += len(stream) - start
+        if self.prefix is not None:
+            self.n_prefix_lookups += 1
+            if shared:
+                self.n_prefix_hits += 1
+                self.pages_shared += len(shared)
+        st.pending_chunks = chunk_plan(len(stream),
                                        self.engine.chunk_len,
-                                       self.engine.chunk_buckets)
+                                       self.engine.chunk_buckets,
+                                       start=start)
         st.tokens, st.token_s, st.finished = [], [], False
 
     def _advance_prefill(self, st: SlotState) -> None:
@@ -657,12 +775,30 @@ class ServeScheduler:
         the preemption, so they are discarded)."""
         start, bucket, valid = st.pending_chunks.pop(0)
         toks = st.prefill_tokens
+        ps = self.engine.page_size
+        # writable-iff-refcount==1 enforcement: a chunk write spanning a
+        # SHARED page (divergent prefill) must copy-on-write first.  With
+        # chunk-floored sharing the plan starts past every shared page, so
+        # this is defensive — it fires only if sharing was forged outside
+        # the admission path
+        first = start // ps
+        last = min(-(-(start + bucket) // ps), len(st.page_ids))
+        for pidx in range(first, last):
+            if not self.allocator.writable(st.page_ids[pidx]):
+                if not self._cow_page(st, pidx):
+                    raise RuntimeError(
+                        f"pool exhausted during copy-on-write of prefill "
+                        f"chunk page {pidx} (slot {st.slot})")
         ck = np.zeros((1, bucket), np.int32)
         ck[0, :valid] = toks[start:start + valid]
         logits = self.engine.prefill_chunk(st.slot, ck, st.page_ids, start,
                                            valid)
         if not st.pending_chunks:
             self.engine.commit_slot(st.slot, st.page_ids)
+            if self.prefix is not None:
+                # cache every full page of the stream — read-only from here
+                # on (decode writes land past the stream end)
+                self.prefix.insert(toks, st.page_ids, self.allocator)
             if st.resume is not None:
                 self._finish_resume(st)
             else:
@@ -682,20 +818,39 @@ class ServeScheduler:
         st.next_token = st.tokens[-1]
         st.finished = False
 
-    def _admission_pages(self, req: Request) -> int:
-        """Pages the head request needs to be admitted.  Lifetime: the full
-        prompt + DECLARED budget reservation (it cannot know the realised
-        length up front).  Demand: the (padded) prefill span of prompt +
-        retained tokens plus room for the first decode write — every
-        admission is then guaranteed at least one token of progress before
-        it can possibly self-preempt, which is what makes the
-        preempt/resume loop terminate."""
+    def _admission_pages(self, req: Request, stream) -> int:
+        """Total pages the head request needs to be admitted (shared +
+        private).  Lifetime: the full prompt + DECLARED budget reservation
+        (it cannot know the realised length up front).  Demand: the
+        (padded) prefill span of the stream (prompt + retained tokens) plus
+        room for the first decode write — every admission is then
+        guaranteed at least one token of progress before it can possibly
+        self-preempt, which is what makes the preempt/resume loop
+        terminate."""
         if not self.demand:
             return self.engine.pages_needed(len(req.tokens),
                                             req.declared_new)
-        sus = self._suspended.get(req.rid)
-        prefill_len = len(req.tokens) + (len(sus.tokens) - 1 if sus else 0)
-        return self.engine.pages_needed(prefill_len, 1)
+        return self.engine.pages_needed(len(stream), 1)
+
+    def _admit_pages(self, n: int) -> list[int] | None:
+        """Admission allocation with prefix-cache fallback: when the free
+        list cannot cover it, evict cache-only entries (deepest-first) and
+        retry once."""
+        pages = self.allocator.admit(n)
+        if pages is None and self.prefix is not None:
+            if self.prefix.evict_for(self.allocator,
+                                     n + self.allocator.watermark):
+                pages = self.allocator.admit(n)
+        return pages
+
+    def _alloc_pages(self, n: int) -> list[int] | None:
+        """Decode-append / COW allocation (may dip below the watermark),
+        with the same cache-eviction fallback."""
+        pages = self.allocator.alloc(n)
+        if pages is None and self.prefix is not None:
+            if self.prefix.evict_for(self.allocator, n):
+                pages = self.allocator.alloc(n)
+        return pages
 
     def _fill_free_slots(self) -> None:
         """Admit a wave: pull queued requests while slots (dense) or slots +
@@ -709,16 +864,24 @@ class ServeScheduler:
         one, and only when the victim's pages actually cover the shortfall
         (anti-thrash guard)."""
         free = [s.slot for s in self.slots if s.free]
-        wave: list[tuple[Request, list[int] | None]] = []
+        wave: list[tuple[Request, list[int] | None,
+                         list[int], np.ndarray | None]] = []
         while len(wave) < len(free) and len(self.queue):
             req = self.queue.pop()
             if not self._fits(req):      # raw queue.submit bypassed admission
                 self.queue.n_rejected += 1
                 continue
-            pages = None
+            pages, shared, stream = None, [], None
             if self.paged:
-                need = self._admission_pages(req)
-                pages = self.allocator.admit(need)
+                stream = self._prefill_stream(req)
+                shared = self._shared_prefix(stream)
+                if shared:
+                    # the slot's references on its hit pages — taken BEFORE
+                    # the private allocation, so eviction inside it cannot
+                    # reclaim them out from under the admission
+                    self.allocator.share(shared)
+                need = self._admission_pages(req, stream) - len(shared)
+                pages = self._admit_pages(need)
                 if (pages is None and self.demand
                         and req.rid in self._suspended):
                     # only a RESUME may preempt to admit: it already earned
@@ -732,22 +895,24 @@ class ServeScheduler:
                         - self.allocator.n_free)
                     if victim is not None:
                         self._preempt(victim)
-                        pages = self.allocator.admit(need)
+                        pages = self._admit_pages(need)
                 if pages is None:        # pool exhausted: wait, don't shed
+                    if shared:           # release the hit refs taken above
+                        self.allocator.free(shared)
                     self.n_admit_deferred += 1
                     self.queue.push_front(req)
                     break
-            wave.append((req, pages))
+            wave.append((req, pages, shared, stream))
         if not wave:
             return
         if self.tracker is not None:
-            assign = self.tracker.place_batch([r for r, _ in wave], free)
+            assign = self.tracker.place_batch([w[0] for w in wave], free)
         else:
-            assign = {req.rid: slot for (req, _), slot in zip(wave, free)}
-        for req, pages in wave:
+            assign = {w[0].rid: slot for w, slot in zip(wave, free)}
+        for req, pages, shared, stream in wave:
             slot = assign[req.rid]
             if self.paged:
-                self._start_prefill(req, slot, pages)
+                self._start_prefill(req, slot, pages, shared, stream)
             else:
                 self._insert(req, slot)
 
@@ -775,12 +940,21 @@ class ServeScheduler:
         cands = [s for s in self.slots
                  if s.request is not None and not s.prefilling
                  and not s.finished and self._floor_ok(s)
-                 and len(s.page_ids) >= shortfall]
+                 and self._n_exclusive(s) >= shortfall]
         if not cands:
             return None
         if self.preempt_policy == "lifo":
             return max(cands, key=lambda s: s.admit_seq)
         return min(cands, key=lambda s: (len(s.tokens), -s.admit_seq))
+
+    def _n_exclusive(self, st: SlotState) -> int:
+        """Pages preempting this slot would actually return to the free
+        list: only its EXCLUSIVELY held ones.  Freeing a shared page merely
+        drops one reference — the prefix cache (or another slot) still
+        holds it — so counting raw ``page_ids`` would overstate a victim's
+        yield and re-introduce the preempt-and-still-fail thrash the
+        shortfall guard exists to prevent."""
+        return sum(1 for p in st.page_ids if self.allocator.writable(p))
 
     def _suspend(self, st: SlotState) -> None:
         """Record the slot's generated tokens as the resume state of its
@@ -821,18 +995,47 @@ class ServeScheduler:
         # order avoids append-then-get-preempted churn within one step
         order = sorted(live, key=lambda s: (-len(s.tokens), s.admit_seq))
         for st in order:
-            while (st.request is not None
-                   and st.pos - 1 >= len(st.page_ids) * ps):
-                pg = self.allocator.alloc(1)
-                if pg is not None:
-                    st.page_ids.append(pg[0])
-                    self.engine.append_page(st.slot, pg[0])
-                    continue
+            while st.request is not None:
+                widx = st.pos - 1        # next KV write position
+                if widx >= len(st.page_ids) * ps:
+                    pg = self._alloc_pages(1)
+                    if pg is not None:
+                        st.page_ids.append(pg[0])
+                        self.engine.append_page(st.slot, pg[0])
+                        continue
+                elif self.allocator.writable(st.page_ids[widx // ps]):
+                    break
+                elif self._cow_page(st, widx // ps):
+                    # decode write would land in a SHARED page: copied and
+                    # remapped, the slot now writes its private page
+                    break
                 victim = self._choose_victim()
                 if victim is None:
                     victim = st          # floor protects only from OTHERS
                 self._preempt(victim)
         return [s for s in live if s.request is not None]
+
+    def _cow_page(self, st: SlotState, pidx: int) -> bool:
+        """Copy-on-write: give the slot a private copy of its shared page
+        ``pidx`` — allocate a fresh page, copy the pool block, swap the
+        slot's mapping (``page_ids`` and, for a committed slot, the live
+        table row) and release the slot's reference on the original (the
+        other holders keep reading it untouched).  Returns False when the
+        pool cannot supply the copy target — the caller preempts and
+        retries."""
+        pg = self._alloc_pages(1)
+        if pg is None:
+            return False
+        src, dst = st.page_ids[pidx], pg[0]
+        self.engine.copy_page(src, dst)
+        st.page_ids[pidx] = dst
+        if not st.prefilling:
+            # mid-prefill slots' live rows park on the trash page; their
+            # real row is installed wholesale by commit_slot
+            self.engine.remap_slot_page(st.slot, pidx, dst)
+        self.allocator.free([src])
+        self.n_cow_copies += 1
+        return True
 
     def _release_slot(self, st: SlotState) -> None:
         """Hand the slot's pages back to the pool and point its page-table
@@ -991,6 +1194,20 @@ class ServeScheduler:
         self.n_preempted = 0
         self.n_admit_deferred = 0
         self.resume_tokens_recomputed = 0
+        self.n_prefix_lookups = 0
+        self.n_prefix_hits = 0
+        self.pages_shared = 0
+        self.n_cow_copies = 0
+
+    def flush_prefix_cache(self) -> int:
+        """Drop every prefix-cache entry, releasing the cache's page
+        references (pages shared with live slots stay outstanding under
+        the slots' refs).  Returns the number of entries dropped — used
+        after warmup so a measured run starts from a cold cache, and at
+        drain checks to prove zero leaked references."""
+        if self.prefix is None:
+            return 0
+        return self.prefix.flush(self.allocator)
 
     # -- metrics ---------------------------------------------------------------
     @property

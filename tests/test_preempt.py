@@ -93,6 +93,14 @@ def _fake_slot(sched, slot, *, n_tokens, admit_seq, pages, resume_base=0):
     st.tokens = list(range(n_tokens))
     st.admit_seq = admit_seq
     st.page_ids = list(pages)
+    # the victim policy counts pages the ALLOCATOR knows as exclusively
+    # held (shared pages yield nothing when freed) — register the fake
+    # slot's pages as real allocations
+    alloc = sched.allocator
+    for p in pages:
+        if alloc.refcount(p) == 0:
+            alloc._free.remove(p)
+            alloc._ref[p] = 1
     st.resume_base = resume_base
     st.pending_chunks, st.finished = [], False
     return st
@@ -100,6 +108,8 @@ def _fake_slot(sched, slot, *, n_tokens, admit_seq, pages, resume_base=0):
 
 def _clear_slots(sched):
     for st in sched.slots:
+        if st.page_ids:
+            sched.allocator.free(st.page_ids)
         st.request, st.tokens, st.page_ids = None, [], []
         st.resume_base, st.admit_seq, st.pending_chunks = 0, 0, []
 
@@ -183,8 +193,8 @@ def test_declared_budget_drives_admission_not_generation(qwen):
     assert req.declared_new == 40
     # lifetime reserves the cap: ceil((5+40)/8) = 6 pages; demand only the
     # prompt span + first write: ceil(8/8) = 1
-    assert lt._admission_pages(req) == 6
-    assert dm._admission_pages(req) == 1
+    assert lt._admission_pages(req, lt._prefill_stream(req)) == 6
+    assert dm._admission_pages(req, dm._prefill_stream(req)) == 1
     # never-fits uses the cap in both modes
     too_big = Request(rid=1, tokens=np.zeros(5, np.int32), max_new=4,
                       budget_new=60)                  # 5 + 60 > max_len

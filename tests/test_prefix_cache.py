@@ -1,0 +1,287 @@
+"""Prefix caching + copy-on-write page sharing (DESIGN.md §11), and the
+allocator/engine safety fixes that ride along:
+
+* ``PageAllocator`` refcounts: writable iff refcount==1, ``share``/``free``
+  reference lifecycle, and batch-validated ``free`` (an invalid batch
+  leaves the allocator UNTOUCHED instead of half-freed),
+* ``PagedEngine.commit_slot`` / ``append_page`` fail-fast validation
+  (zero id mid-row, out-of-range ids, over-long rows),
+* ``chunk_plan(start=)`` suffix property — the bit-exactness contract
+  chunk-floored sharing relies on,
+* ``PrefixCache`` chain semantics: lookup/insert, deepest-first eviction,
+  refcount protection, flush,
+* end-to-end: a cache-hit admission bit-matches the no-cache run, and a
+  forged shared page on the decode write path triggers COW (copy + remap)
+  without changing the generated tokens.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.transformer import init_params
+from repro.serve import (PageAllocator, PagedEngine, PrefixCache,
+                         ServeScheduler, chunk_buckets_for, chunk_plan)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = dataclasses.replace(get_smoke_config("qwen2-1.5b"),
+                              compute_dtype="float32")
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def engine(qwen):
+    cfg, params = qwen
+    return PagedEngine(cfg, params, batch=2, max_len=64, page_size=8,
+                       prefill_chunk=16)
+
+
+def _fresh(eng):
+    eng.page_table[:] = 0
+    eng._pt_device = None
+    return eng
+
+
+def _prompt(rng, cfg, n):
+    return rng.integers(0, cfg.vocab_size - 1, (n,)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Allocator refcounts (no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_share_refcount_and_writable():
+    a = PageAllocator(8)
+    [p, q] = a.alloc(2)
+    assert a.refcount(p) == 1 and a.writable(p)
+    a.share([p])
+    assert a.refcount(p) == 2 and not a.writable(p)
+    assert a.writable(q)                     # unshared page unaffected
+    a.free([p])                              # drops ONE reference
+    assert a.refcount(p) == 1 and a.writable(p)
+    assert p in a.outstanding                # still held -> not recycled
+    a.free([p, q])
+    assert a.refcount(p) == 0 and a.n_outstanding == 0
+    with pytest.raises(ValueError):          # sharing a free page
+        a.share([p])
+    assert a.refcount(3) == 0 and not a.writable(0)
+
+
+def test_allocator_free_validates_whole_batch_before_mutating():
+    """A bad batch (double free / foreign page) must leave the allocator
+    EXACTLY as it was — the old implementation freed the leading pages
+    before raising mid-loop, breaking conservation for the rest of the
+    run."""
+    a = PageAllocator(8)
+    pages = a.alloc(4)
+    free_before, out_before = a.n_free, set(a.outstanding)
+    with pytest.raises(ValueError):
+        a.free([pages[0], pages[1], 99])     # foreign page last
+    assert a.n_free == free_before
+    assert set(a.outstanding) == out_before
+    assert all(a.refcount(p) == 1 for p in pages)
+    # over-free within one batch: page listed twice but refcount 1
+    with pytest.raises(ValueError):
+        a.free([pages[0], pages[0]])
+    assert a.refcount(pages[0]) == 1
+    # ...but two frees of a DOUBLY-referenced page in one batch are fine
+    a.share([pages[0]])
+    a.free([pages[0], pages[0]])
+    assert a.refcount(pages[0]) == 0
+    a.free(pages[1:])
+    assert a.n_outstanding == 0 and a.n_free == 7
+
+
+# ---------------------------------------------------------------------------
+# Engine validation + chunk-plan suffix property
+# ---------------------------------------------------------------------------
+
+
+def test_commit_slot_rejects_zero_mid_row_and_overlong(engine):
+    eng = _fresh(engine)
+    eng.ensure_batch()
+    with pytest.raises(ValueError):          # zero id would truncate the
+        eng.commit_slot(0, [1, 0, 2])        # nonzero prefix appends scan
+    with pytest.raises(ValueError):          # out of range
+        eng.commit_slot(0, [1, eng.num_pages])
+    with pytest.raises(ValueError):          # over-long row
+        eng.commit_slot(0, list(range(1, eng.max_pages + 2)))
+    assert (eng.page_table[0] == 0).all()    # nothing installed
+    eng.commit_slot(0, [1, 2])
+    assert eng.page_table[0, :2].tolist() == [1, 2]
+    eng.free_slot(0)
+
+
+def test_append_page_bounds_checks_pool_size(engine):
+    eng = _fresh(engine)
+    eng.ensure_batch()
+    eng.commit_slot(0, [1])
+    with pytest.raises(ValueError):
+        eng.append_page(0, eng.num_pages)    # foreign id: device pool OOB
+    with pytest.raises(ValueError):
+        eng.append_page(0, 0)
+    eng.append_page(0, 2)
+    assert eng.page_table[0, :2].tolist() == [1, 2]
+    eng.free_slot(0)
+
+
+def test_chunk_plan_start_is_suffix_of_full_plan():
+    buckets = chunk_buckets_for(16, 8)
+    for true_len in (17, 33, 40, 48, 61):
+        full = chunk_plan(true_len, 16, buckets)
+        for k in range(1, len(full)):
+            start = full[k][0]
+            assert chunk_plan(true_len, 16, buckets, start=start) == full[k:]
+    with pytest.raises(ValueError):          # non-chunk-aligned start
+        chunk_plan(40, 16, buckets, start=8)
+    with pytest.raises(ValueError):          # start past the stream
+        chunk_plan(16, 16, buckets, start=16)
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache chain semantics (no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_lookup_insert_chain():
+    a = PageAllocator(16)
+    pc = PrefixCache(page_size=4)
+    toks = np.arange(11, dtype=np.int32)     # 2 full pages + tail
+    pages = a.alloc(3)
+    assert pc.insert(toks, pages, a) == 2    # only FULL pages cached
+    assert all(a.refcount(p) == 2 for p in pages[:2])
+    assert a.refcount(pages[2]) == 1
+    assert pc.lookup(toks) == pages[:2]
+    # longer stream sharing the 2-page prefix: chain stops at the break
+    longer = np.concatenate([toks[:8], np.full(8, 7, np.int32)])
+    assert pc.lookup(longer) == pages[:2]
+    # different FIRST page: no hit at all (keys chain through the prefix)
+    other = np.concatenate([np.full(4, 9, np.int32), toks[4:]])
+    assert pc.lookup(other) == []
+    # re-insert under the same keys keeps the original pages (no steal)
+    dup = a.alloc(2)
+    assert pc.insert(toks[:8], dup, a) == 0
+    assert pc.lookup(toks) == pages[:2]
+    a.free(dup)
+    pc.flush(a)
+    a.free(pages)
+    assert a.n_outstanding == 0
+
+
+def test_prefix_cache_eviction_deepest_first_and_refcount_guard():
+    a = PageAllocator(8)                     # 7 usable
+    pc = PrefixCache(page_size=4)
+    toks = np.arange(12, dtype=np.int32)     # 3 full pages
+    pages = a.alloc(3)
+    pc.insert(toks, pages, a)
+    a.free(pages)                            # cache is now the only holder
+    assert set(a.outstanding) == set(pages) and len(pc) == 3
+    # a slot still maps the depth-2 page: it must survive eviction
+    a.share([pages[1]])
+    freed = pc.evict_for(a, a.n_free + 3)
+    # deepest-first: page 3 then page 1 freed; page 2 protected (refcount 2)
+    assert freed == 2
+    assert set(a.outstanding) == {pages[1]}
+    assert len(pc) == 1 and pc.pages() == {pages[1]}
+    a.free([pages[1]])                       # the "slot's" ref
+    assert pc.flush(a) == 1
+    assert a.n_outstanding == 0 and a.n_free == 7
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: hit bit-match + forged-sharing COW
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_admission_bitmatches_no_cache_run(qwen):
+    """Sequential identical-prefix requests on a batch=1 engine: the first
+    populates the cache, the second admits onto shared pages and prefills
+    only the tail chunk — its tokens must bit-match the cache-off run.
+    Covers the aligned-prompt case too (prompt = whole chunks): the floor
+    keeps the final chunk unshared so its logits are reproduced exactly."""
+    cfg, params = qwen
+    eng = PagedEngine(cfg, params, batch=1, max_len=64, page_size=8,
+                      prefill_chunk=16)
+    rng = np.random.default_rng(3)
+    prefix = _prompt(rng, cfg, 24)
+    prompts = [np.concatenate([prefix, _prompt(rng, cfg, 7)]),
+               np.concatenate([prefix, _prompt(rng, cfg, 9)]),
+               np.concatenate([prefix, _prompt(rng, cfg, 8)])]  # aligned: 32
+
+    def run(share):
+        sched = ServeScheduler(eng, prefix_cache=share)
+        _fresh(eng)
+        out = []
+        for p in prompts:                    # batch=1 => strictly sequential
+            sched.submit(p, max_new=5)
+            out.append(sched.run()[-1].tokens)
+        if share:
+            assert sched.n_prefix_hits >= 2  # requests 2 and 3 hit
+            assert sched.pages_shared > 0
+            cached = sched.prefix.pages()
+            assert set(sched.allocator.outstanding) == cached
+            sched.flush_prefix_cache()
+        assert sched.allocator.n_outstanding == 0
+        return out
+
+    assert run(False) == run(True)
+
+
+def test_forged_shared_page_triggers_cow_on_decode(qwen):
+    """Force the writable-iff-refcount==1 enforcement: mid-decode, take an
+    extra reference on the slot's current write page.  The next decode
+    step must copy-on-write (fresh page, pool-block copy, table remap) —
+    and the generated tokens must be unchanged, which proves the copy
+    carries the real K/V bits."""
+    cfg, params = qwen
+    eng = PagedEngine(cfg, params, batch=1, max_len=64, page_size=8,
+                      prefill_chunk=16)
+    rng = np.random.default_rng(4)
+    prompt = _prompt(rng, cfg, 12)
+
+    def run(forge):
+        sched = ServeScheduler(eng, reserve="demand")
+        _fresh(eng)
+        sched.submit(prompt, max_new=10)
+        forged = []
+        while sched.step():
+            st = sched.slots[0]
+            if forge and st.request is not None and not st.prefilling \
+                    and not forged:
+                # second holder on EVERY current page: decode must COW the
+                # write page before its next in-place KV write
+                forged = list(st.page_ids)
+                sched.allocator.share(forged)
+        [res] = sched.results
+        if forge:
+            assert sched.n_cow_copies >= 1
+            st = sched.slots[0]
+            # the forged refs keep the originals outstanding; release them
+            assert set(forged) <= set(sched.allocator.outstanding)
+            sched.allocator.free(forged)
+        assert sched.allocator.n_outstanding == 0
+        return res.tokens
+
+    assert run(False) == run(True)
+
+
+def test_prefix_cache_requires_paged_and_gates_ssm(qwen):
+    cfg, params = qwen
+    from repro.serve import Engine
+    dense = Engine(cfg, params, batch=1, max_len=32)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ServeScheduler(dense, prefix_cache=True)
+    mcfg = dataclasses.replace(get_smoke_config("mamba2-370m"),
+                               compute_dtype="float32")
+    mparams = init_params(mcfg, jax.random.PRNGKey(0))
+    meng = PagedEngine(mcfg, mparams, batch=1, max_len=32, page_size=8,
+                       prefill_chunk=16)
+    assert not meng.supports_prefix_cache    # per-slot SSM state: no pages
+    sched = ServeScheduler(meng, prefix_cache=True)
+    assert sched.prefix is None              # knob accepted, sharing inert
+    assert not sched.prefix_cache_active

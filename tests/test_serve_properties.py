@@ -3,19 +3,27 @@ through ``ServeScheduler`` + ``PagedEngine`` on the tiny qwen2/mamba2
 configs, with the scheduler's structural invariants asserted after EVERY
 step:
 
-* no page aliasing across live slots (each outstanding page owned by
-  exactly one slot, never the trash page),
+* no duplicate pages within a slot, never the trash page; with the
+  prefix cache OFF, each outstanding page is owned by exactly one slot,
+* refcount accounting (prefix cache ON): every outstanding page's
+  reference count equals the number of slots mapping it plus the cache's
+  own hold, and writable iff refcount == 1,
 * allocator conservation: ``n_free + n_outstanding`` equals the usable
-  pool, and the outstanding set equals the union of slot ``page_ids``,
+  pool, and the outstanding set equals the union of slot ``page_ids``
+  (plus the cache-held pages when sharing is on),
 * the engine's live page table mirrors each committed slot's pages
   (mid-prefill and free slots parked on the trash page),
-* at drain: zero leaked pages, every admitted request completed exactly
-  once, and each request's tokens bit-match its preemption-free
-  single-request run (the recompute-resume correctness oracle).
+* at drain: outstanding pages are exactly the cache-held ones (zero after
+  a flush — no leaked references), every admitted request completed
+  exactly once, and each request's tokens bit-match its preemption-free
+  single-request run (the recompute-resume correctness oracle) — with
+  sharing enabled too, including under demand-mode preemption.
 
 Pool sizes sweep down to near-exhaustion so lifetime mode exercises
 deferred admission and demand mode exercises the preempt/resume state
-machine.  Engines are cached per draw key (jit programs compile once —
+machine; shared-prefix traces (all prompts opening with the same tokens)
+exercise cache hits, shared-page admission and cache eviction under
+pressure.  Engines are cached per draw key (jit programs compile once —
 slot and pool reuse across examples is exactly production slot reuse); the
 example budget is raised in the tier-2 CI lane via ``SERVE_SOAK_EXAMPLES``.
 """
@@ -52,11 +60,21 @@ def _model(arch):
 
 
 @functools.lru_cache(maxsize=None)
-def _prompts(arch):
+def _prompts(arch, share=False):
+    """Random prompts per length; with ``share``, every prompt >= 2 pages
+    opens with the SAME page-aligned prefix (system-prompt workload) so
+    the prefix cache gets real hits."""
     cfg, _ = _model(arch)
     rng = np.random.default_rng(99)
-    return tuple(rng.integers(0, cfg.vocab_size - 1, (n,)).astype(np.int32)
-                 for n in PROMPT_LENS)
+    prompts = [rng.integers(0, cfg.vocab_size - 1, (n,)).astype(np.int32)
+               for n in PROMPT_LENS]
+    if share:
+        prefix = rng.integers(0, cfg.vocab_size - 1,
+                              (2 * PAGE,)).astype(np.int32)
+        prompts = [np.concatenate([prefix, p[len(prefix):]])
+                   if len(p) > len(prefix) else p
+                   for p in prompts]
+    return tuple(prompts)
 
 
 @functools.lru_cache(maxsize=None)
@@ -74,25 +92,41 @@ def _ref_engine(arch):
 
 
 @functools.lru_cache(maxsize=None)
-def _reference(arch, prompt_idx, max_new):
-    """Preemption-free single-request oracle, memoised across examples."""
+def _reference(arch, prompt_idx, max_new, share=False):
+    """Preemption-free, sharing-free single-request oracle, memoised
+    across examples.  ``share`` only selects the prompt set — the oracle
+    itself never uses the prefix cache, which is exactly what makes it an
+    oracle for the sharing path's bit-exactness."""
     sched = ServeScheduler(_ref_engine(arch))
-    sched.submit(_prompts(arch)[prompt_idx], max_new=max_new)
+    sched.submit(_prompts(arch, share)[prompt_idx], max_new=max_new)
     [res] = sched.run()
     return tuple(res.tokens)
 
 
 def _check_invariants(sched):
+    from collections import Counter
+
     alloc, eng = sched.allocator, sched.engine
     # conservation: free + outstanding is exactly the usable pool
     assert alloc.n_free + alloc.n_outstanding == \
         alloc.num_pages - alloc.n_reserved
     owned = [p for s in sched.slots for p in s.page_ids]
-    # no aliasing: every outstanding page belongs to exactly one slot, and
-    # the trash page is never owned
-    assert len(owned) == len(set(owned))
-    assert set(owned) == set(alloc.outstanding)
-    assert 0 not in owned
+    mapped = Counter(owned)
+    cached = sched.prefix.pages() if sched.prefix is not None else set()
+    # a slot's own row never repeats a page; the trash page has no holders
+    for s in sched.slots:
+        assert len(s.page_ids) == len(set(s.page_ids))
+    assert 0 not in mapped and 0 not in cached
+    # outstanding = slot-mapped ∪ cache-held; per-page refcounts are
+    # exactly the mapping slots plus the cache's own hold, and a page is
+    # writable iff it has a single reference
+    assert set(mapped) | cached == set(alloc.outstanding)
+    for p in alloc.outstanding:
+        assert alloc.refcount(p) == mapped[p] + (1 if p in cached else 0)
+        assert alloc.writable(p) == (alloc.refcount(p) == 1)
+    if sched.prefix is None:
+        # sharing off: the original exclusive-ownership invariant
+        assert all(c == 1 for c in mapped.values())
     for s in sched.slots:
         n = len(s.page_ids)
         row = eng.page_table[s.slot]
@@ -112,12 +146,13 @@ def _check_invariants(sched):
        pool=st.integers(MIN_POOL, MAX_POOL),
        demand=st.booleans(),
        policy=st.sampled_from(("fewest", "lifo")),
-       watermark=st.integers(0, 2))
+       watermark=st.integers(0, 2),
+       share=st.booleans())
 @settings(max_examples=MAX_EXAMPLES, deadline=None,
           suppress_health_check=[HealthCheck.too_slow,
                                  HealthCheck.data_too_large])
 def test_serve_soak_invariants_and_bitmatch(arch, reqs, pool, demand,
-                                            policy, watermark):
+                                            policy, watermark, share):
     eng = _engine(arch)
     # the engine is shared across examples (jit reuse); a PREVIOUS failing
     # example may have left committed rows behind — park everything on the
@@ -129,10 +164,12 @@ def test_serve_soak_invariants_and_bitmatch(arch, reqs, pool, demand,
         eng, pool_pages=pool,
         reserve="demand" if demand else "lifetime",
         preempt_policy=policy,
-        admit_watermark=watermark if demand else 0)
+        admit_watermark=watermark if demand else 0,
+        prefix_cache=share)    # mamba2 stays uncached (SSM state): the
+    #                           knob must be safe to pass uniformly
     rids = {}
     for idx, max_new in reqs:
-        rid = sched.submit(_prompts(arch)[idx], max_new=max_new)
+        rid = sched.submit(_prompts(arch, share)[idx], max_new=max_new)
         if rid is not None:                  # tight pools may shed up front
             rids[rid] = (idx, max_new)
 
@@ -142,10 +179,16 @@ def test_serve_soak_invariants_and_bitmatch(arch, reqs, pool, demand,
         steps += 1
         assert steps < STEP_CAP, (
             f"drain did not finish in {STEP_CAP} steps "
-            f"(reqs={reqs}, pool={pool}, demand={demand})")
+            f"(reqs={reqs}, pool={pool}, demand={demand}, share={share})")
 
-    # drain: no leaked pages, table fully parked, queue empty
+    # drain: outstanding pages are exactly the cache-held ones (each at
+    # refcount 1 — the cache's own hold), none after a flush; table fully
+    # parked, queue empty
     _check_invariants(sched)
+    cached = sched.prefix.pages() if sched.prefix is not None else set()
+    assert set(sched.allocator.outstanding) == cached
+    assert all(sched.allocator.refcount(p) == 1 for p in cached)
+    sched.flush_prefix_cache()
     assert sched.allocator.n_outstanding == 0
     assert (sched.engine.page_table == 0).all()
     assert not sched._suspended
@@ -155,11 +198,14 @@ def test_serve_soak_invariants_and_bitmatch(arch, reqs, pool, demand,
         assert res.rid not in done
         done[res.rid] = res
     assert sorted(done) == sorted(rids)
-    # …with tokens bit-matching its preemption-free single-request run
+    # …with tokens bit-matching its preemption-free, SHARING-FREE
+    # single-request run — prefix reuse must be invisible in the output
     for rid, (idx, max_new) in rids.items():
-        assert tuple(done[rid].tokens) == _reference(arch, idx, max_new), (
-            f"rid {rid} (prompt {idx}, max_new {max_new}) diverged "
-            f"(pool={pool}, demand={demand}, preempts={sched.n_preempted})")
+        assert tuple(done[rid].tokens) == \
+            _reference(arch, idx, max_new, share), (
+                f"rid {rid} (prompt {idx}, max_new {max_new}) diverged "
+                f"(pool={pool}, demand={demand}, share={share}, "
+                f"preempts={sched.n_preempted})")
 
 
 def test_shim_not_active_in_ci():

@@ -81,6 +81,13 @@ def suite_hypar(*, smoke: bool = False) -> list[dict]:
     rows = [bench_row(f"hypar_lm_{k}", (), "float32", h[f"{k}_s"],
                       overhead_pct=h["overhead_pct"] if k == "hypar" else 0.0)
             for k in ("tailored", "hypar")]
+    print("== hypar_proc (process-worker vs thread dispatch) ==")
+    p = hypar_overhead.run_proc_dispatch(
+        **(dict(depth=4, dim=128, repeats=2) if smoke else {}))
+    rows.append(bench_row("hypar_proc", (), "float64", p["proc_s"],
+                          thread_s=p["thread_s"],
+                          proc_vs_thread_pct=p["proc_vs_thread_pct"],
+                          n_jobs=p["n_jobs"]))
     _write("BENCH_hypar.json", rows)
     return rows
 

@@ -18,6 +18,8 @@ from .scheduler import (CostModelParams, MasterScheduler, Placement,
 from .executor import (BaseExecutor, ExecutionReport, IterativeSpec,
                        LocalExecutor, SpmdExecutor)
 from .fault import ChaosLocalExecutor, FaultInjector, Heartbeat
+from .store import JobStore, job_key
+from .procworker import ProcessExecutor, WorkerFunctionError
 
 __all__ = [
     "ChunkedData", "ChunkRef", "DataChunk", "GraphValidationError", "Job",
@@ -27,5 +29,6 @@ __all__ = [
     "ResultStore", "SchedulerProc",
     "VirtualCluster", "Worker", "ExecutionReport", "IterativeSpec",
     "LocalExecutor", "SpmdExecutor", "ChaosLocalExecutor", "FaultInjector",
-    "Heartbeat",
+    "Heartbeat", "JobStore", "job_key", "ProcessExecutor",
+    "WorkerFunctionError",
 ]

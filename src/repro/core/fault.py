@@ -54,9 +54,11 @@ class FaultInjector:
         """Apply due plans; returns names of results lost."""
         lost: list[str] = []
         for plan in list(self.plans):
-            if plan.worker >= len(cluster.workers):
+            # match on wid, not list index: once replacement workers exist
+            # the two can diverge and an index lookup kills the wrong worker
+            w = next((x for x in cluster.workers if x.wid == plan.worker), None)
+            if w is None:
                 continue
-            w = cluster.workers[plan.worker]
             due = ((plan.after_jobs is not None and w.jobs_done >= plan.after_jobs)
                    or (plan.before_segment is not None and segment is not None
                        and segment >= plan.before_segment))
@@ -69,24 +71,69 @@ class FaultInjector:
 
 
 class Heartbeat:
-    """Simulated liveness monitor: beats are reported by the executor after
-    each job; a silent worker is declared dead after ``max_missed`` rounds."""
+    """Liveness monitor: a silent worker is declared dead after
+    ``max_missed`` beats — *discovery*, not notification.
 
-    def __init__(self, cluster: VirtualCluster, max_missed: int = 3):
+    Two modes:
+
+    * **round-based** (default) — beats are reported by the executor after
+      each job; ``tick`` advances one monitoring round and a worker silent
+      for more than ``max_missed`` rounds is failed.
+    * **store-backed** — pass a :class:`repro.core.store.JobStore`; real
+      worker processes stamp wall-clock heartbeats into the store on a
+      timer (``interval_s``) and ``tick``/``expired_wids`` compare against
+      ``max_missed * interval_s`` of silence.  This is what replaces the
+      explicit ``fail()`` protocol for the :class:`ProcessExecutor`.
+
+    Registration itself counts as a beat: a replacement worker spawned
+    mid-run must not be killed on the next tick before it ran a single job
+    (previously ``last_beat.get(w.wid, 0)`` treated it as silent since
+    round 0).
+    """
+
+    def __init__(self, cluster: VirtualCluster, max_missed: int = 3, *,
+                 store=None, interval_s: float = 1.0,
+                 boot_grace_s: float = 10.0):
         self.cluster = cluster
         self.max_missed = max_missed
+        self.store = store
+        self.interval_s = interval_s
+        # real processes take far longer to boot (interpreter + imports)
+        # than one beat interval; a worker that never checked in only
+        # expires after this grace
+        self.boot_grace_s = boot_grace_s
         self.last_beat: dict[int, int] = {}
         self.round = 0
 
+    def register(self, wid: int) -> None:
+        """Record the registration-time beat for a newly spawned worker."""
+        self.last_beat.setdefault(wid, self.round)
+
     def beat(self, wid: int) -> None:
         self.last_beat[wid] = self.round
+
+    def expired_wids(self) -> list[int]:
+        """Alive workers whose last beat is too old (does not fail them)."""
+        if self.store is not None:
+            expired = set(self.store.expired(
+                self.max_missed * self.interval_s,
+                boot_grace_s=self.boot_grace_s))
+            return [w.wid for w in self.cluster.alive_workers()
+                    if w.wid in expired]
+        out = []
+        for w in self.cluster.alive_workers():
+            self.register(w.wid)  # first sight == registration beat
+            if self.round - self.last_beat[w.wid] > self.max_missed:
+                out.append(w.wid)
+        return out
 
     def tick(self, store: ResultStore) -> list[str]:
         """Advance one monitoring round; kill silent workers, return lost results."""
         self.round += 1
         lost: list[str] = []
+        expired = set(self.expired_wids())
         for w in self.cluster.alive_workers():
-            if self.round - self.last_beat.get(w.wid, 0) > self.max_missed:
+            if w.wid in expired:
                 w.fail()
                 lost.extend(store.invalidate_worker(w.wid))
         return lost

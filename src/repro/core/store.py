@@ -1,0 +1,369 @@
+"""Durable job store — sqlite-backed persistence for the cluster runtime.
+
+The paper's §5 names the cost of ``no_send_back``: "in case a worker has to
+be shut down, all results computed so far are lost and have to be
+re-computed".  The executors recover by *recomputing* (lineage recovery);
+this module removes the recomputation for anything that already finished by
+persisting results keyed on **content identity** — the registered function
+name plus a canonical hash of the input arrays — so a restarted run (or a
+run that lost its master process entirely) resumes from ``done`` rows
+instead of re-executing them (orco-style memoisation, SNIPPETS §1).
+
+Three tables:
+
+* ``jobs``    — one row per content-identity key: state machine
+                ``pending → running → done`` (or ``lost`` when the owning
+                worker dies mid-job), retry count, and the result payload —
+                small results inline as an npz blob, large ones spilled to
+                ``<store>.d/<key>.npz``.
+* ``workers`` — executor/worker registrations with wall-clock
+                ``last_heartbeat`` stamps; the master's monitor *discovers*
+                dead workers by heartbeat expiry instead of being told via
+                an explicit ``fail()`` call.
+* ``requests``— serve-path host-retained state (generated tokens of
+                suspended requests) so recompute-on-resume (DESIGN §10)
+                survives a master restart, not just a worker death.
+
+Deliberately **jax-free**: worker child processes import this module and
+must not pay the multi-second jax import (nor touch a device).
+
+Concurrency: WAL journal mode + busy_timeout makes concurrent writers from
+the master and every worker process safe; within one process a single
+connection is shared behind a lock (sqlite serialises at the VFS level
+across processes, we serialise at the connection level within one).
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import os
+import sqlite3
+import threading
+import time
+from typing import Any, Iterable, Mapping, Sequence
+
+import numpy as np
+
+__all__ = ["JobStore", "job_key"]
+
+
+def _canon(a: Any) -> np.ndarray:
+    arr = np.asarray(a)
+    return np.ascontiguousarray(arr)
+
+
+def job_key(fn_name: str, inputs: Iterable[Any]) -> str:
+    """Content identity of a job: registered function name + canonical hash
+    of every input array (dtype, shape, raw bytes).  Two jobs with the same
+    key compute the same result, whatever their graph-local names are —
+    which is exactly what lets a *restarted* run hit rows written by a
+    previous incarnation of the same graph."""
+    h = hashlib.sha256()
+    h.update(fn_name.encode())
+    for a in inputs:
+        arr = _canon(a)
+        h.update(b"|")
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def _pack(arrays: Sequence[Any]) -> bytes:
+    buf = io.BytesIO()
+    np.savez(buf, **{f"a{i}": _canon(a) for i, a in enumerate(arrays)})
+    return buf.getvalue()
+
+
+def _unpack(blob: bytes) -> list[np.ndarray]:
+    with np.load(io.BytesIO(blob)) as z:
+        return [z[f"a{i}"] for i in range(len(z.files))]
+
+
+_SCHEMA = """
+CREATE TABLE IF NOT EXISTS jobs (
+    key        TEXT PRIMARY KEY,
+    name       TEXT,
+    fn         TEXT,
+    state      TEXT NOT NULL DEFAULT 'pending',
+    worker     INTEGER,
+    retries    INTEGER NOT NULL DEFAULT 0,
+    payload    BLOB,
+    spill      TEXT,
+    updated_at REAL NOT NULL
+);
+CREATE TABLE IF NOT EXISTS workers (
+    wid            INTEGER PRIMARY KEY,
+    pid            INTEGER,
+    started_at     REAL NOT NULL,
+    last_heartbeat REAL NOT NULL,
+    alive          INTEGER NOT NULL DEFAULT 1
+);
+CREATE TABLE IF NOT EXISTS requests (
+    rid        TEXT PRIMARY KEY,
+    payload    BLOB NOT NULL,
+    updated_at REAL NOT NULL
+);
+CREATE TABLE IF NOT EXISTS meta (
+    k TEXT PRIMARY KEY,
+    v TEXT
+);
+"""
+
+
+class JobStore:
+    """One sqlite file = one durable run.  Safe for one writer per process
+    and many processes (WAL); every method is atomic."""
+
+    STATES = ("pending", "running", "done", "lost")
+
+    def __init__(self, path: str | os.PathLike, *,
+                 spill_bytes: int = 1 << 20):
+        self.path = os.fspath(path)
+        self.spill_bytes = spill_bytes
+        self.spill_dir = self.path + ".d"
+        self._lock = threading.Lock()
+        self._conn = sqlite3.connect(self.path, timeout=30.0,
+                                     check_same_thread=False)
+        self._conn.execute("PRAGMA journal_mode=WAL")
+        self._conn.execute("PRAGMA synchronous=NORMAL")
+        self._conn.execute("PRAGMA busy_timeout=30000")
+        with self._lock, self._conn:
+            self._conn.executescript(_SCHEMA)
+
+    def close(self) -> None:
+        with self._lock:
+            self._conn.close()
+
+    # -- job state machine -------------------------------------------------
+    def state(self, key: str) -> str | None:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT state FROM jobs WHERE key=?", (key,)).fetchone()
+        return row[0] if row else None
+
+    def mark_running(self, key: str, *, name: str = "", fn: str = "",
+                     worker: int | None = None) -> None:
+        """Claim a job (pending/lost → running); done rows are untouched —
+        the caller should have taken the memoised result instead."""
+        now = time.time()
+        with self._lock, self._conn:
+            self._conn.execute(
+                "INSERT INTO jobs(key, name, fn, state, worker, updated_at) "
+                "VALUES(?,?,?,'running',?,?) "
+                "ON CONFLICT(key) DO UPDATE SET "
+                "  state=CASE WHEN jobs.state='done' THEN 'done' ELSE 'running' END, "
+                "  name=excluded.name, fn=excluded.fn, "
+                "  worker=excluded.worker, updated_at=excluded.updated_at",
+                (key, name, fn, worker, now))
+
+    def bump_retries(self, key: str) -> int:
+        with self._lock, self._conn:
+            self._conn.execute(
+                "UPDATE jobs SET retries=retries+1, updated_at=? WHERE key=?",
+                (time.time(), key))
+            row = self._conn.execute(
+                "SELECT retries FROM jobs WHERE key=?", (key,)).fetchone()
+        return int(row[0]) if row else 0
+
+    def put_result(self, key: str, arrays: Sequence[Any], *,
+                   name: str = "", fn: str = "",
+                   worker: int | None = None) -> None:
+        """Persist a finished job's result (state → done).  Results above
+        ``spill_bytes`` go to a spill file under the run dir; the row keeps
+        only the relative filename."""
+        blob = _pack(arrays)
+        spill = None
+        payload: bytes | None = blob
+        if len(blob) > self.spill_bytes:
+            os.makedirs(self.spill_dir, exist_ok=True)
+            spill = key + ".npz"
+            tmp = os.path.join(self.spill_dir, spill + ".tmp")
+            with open(tmp, "wb") as f:
+                f.write(blob)
+            os.replace(tmp, os.path.join(self.spill_dir, spill))
+            payload = None
+        now = time.time()
+        with self._lock, self._conn:
+            self._conn.execute(
+                "INSERT INTO jobs(key, name, fn, state, worker, payload, spill, updated_at) "
+                "VALUES(?,?,?,'done',?,?,?,?) "
+                "ON CONFLICT(key) DO UPDATE SET state='done', "
+                "  name=excluded.name, fn=excluded.fn, worker=excluded.worker, "
+                "  payload=excluded.payload, spill=excluded.spill, "
+                "  updated_at=excluded.updated_at",
+                (key, name, fn, worker, payload, spill, now))
+
+    def load_result(self, key: str) -> list[np.ndarray] | None:
+        """Memoisation hit: the arrays of a ``done`` row, else None."""
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT state, payload, spill FROM jobs WHERE key=?",
+                (key,)).fetchone()
+        if row is None or row[0] != "done":
+            return None
+        state, payload, spill = row
+        if payload is not None:
+            return _unpack(payload)
+        fp = os.path.join(self.spill_dir, spill)
+        try:
+            with open(fp, "rb") as f:
+                return _unpack(f.read())
+        except FileNotFoundError:
+            return None
+
+    def mark_lost(self, key: str) -> None:
+        with self._lock, self._conn:
+            self._conn.execute(
+                "UPDATE jobs SET state='lost', updated_at=? "
+                "WHERE key=? AND state!='done'", (time.time(), key))
+
+    def mark_worker_jobs_lost(self, wid: int) -> list[str]:
+        """A worker died: every job it was *running* is lost (its in-flight
+        work is gone; its done rows stay — they were persisted first)."""
+        with self._lock, self._conn:
+            rows = self._conn.execute(
+                "SELECT key FROM jobs WHERE worker=? AND state='running'",
+                (wid,)).fetchall()
+            self._conn.execute(
+                "UPDATE jobs SET state='lost', updated_at=? "
+                "WHERE worker=? AND state='running'", (time.time(), wid))
+        return [r[0] for r in rows]
+
+    def counts(self) -> dict[str, int]:
+        with self._lock:
+            rows = self._conn.execute(
+                "SELECT state, COUNT(*) FROM jobs GROUP BY state").fetchall()
+        return {state: n for state, n in rows}
+
+    def n_done(self) -> int:
+        return self.counts().get("done", 0)
+
+    # -- worker registration / heartbeats ---------------------------------
+    def register_worker(self, wid: int, pid: int | None = None) -> None:
+        """Registration counts as the first beat — a worker spawned just
+        before a monitor tick must not be declared dead before it runs a
+        single job (the Heartbeat round-0 bug, fixed the same way)."""
+        now = time.time()
+        with self._lock, self._conn:
+            self._conn.execute(
+                "INSERT INTO workers(wid, pid, started_at, last_heartbeat, alive) "
+                "VALUES(?,?,?,?,1) "
+                "ON CONFLICT(wid) DO UPDATE SET pid=excluded.pid, "
+                "  started_at=excluded.started_at, "
+                "  last_heartbeat=excluded.last_heartbeat, alive=1",
+                (wid, pid, now, now))
+
+    def beat(self, wid: int) -> None:
+        with self._lock, self._conn:
+            self._conn.execute(
+                "UPDATE workers SET last_heartbeat=? WHERE wid=?",
+                (time.time(), wid))
+
+    def heartbeats(self) -> dict[int, float]:
+        with self._lock:
+            rows = self._conn.execute(
+                "SELECT wid, last_heartbeat FROM workers WHERE alive=1").fetchall()
+        return {wid: hb for wid, hb in rows}
+
+    def expired(self, timeout_s: float, *, boot_grace_s: float | None = None,
+                now: float | None = None) -> list[int]:
+        """Wids whose heartbeat is older than ``timeout_s`` — discovery, not
+        notification: nobody calls fail(), the silence itself is the signal.
+
+        A row whose ``pid`` is still NULL was registered by the master but
+        its process has not checked in yet (interpreter boot + imports can
+        far exceed the beat interval); such workers only expire after
+        ``boot_grace_s``."""
+        now = time.time() if now is None else now
+        with self._lock:
+            rows = self._conn.execute(
+                "SELECT wid, last_heartbeat, pid FROM workers "
+                "WHERE alive=1").fetchall()
+        out = []
+        for wid, hb, pid in rows:
+            limit = timeout_s if pid is not None else max(
+                timeout_s, boot_grace_s if boot_grace_s is not None else timeout_s)
+            if now - hb > limit:
+                out.append(wid)
+        return out
+
+    def booted_wids(self) -> list[int]:
+        """Alive workers whose process has checked in (stamped its pid)."""
+        with self._lock:
+            rows = self._conn.execute(
+                "SELECT wid FROM workers WHERE alive=1 AND pid IS NOT NULL"
+            ).fetchall()
+        return [r[0] for r in rows]
+
+    def mark_worker_dead(self, wid: int) -> None:
+        with self._lock, self._conn:
+            self._conn.execute(
+                "UPDATE workers SET alive=0 WHERE wid=?", (wid,))
+
+    # -- serve-path request persistence -----------------------------------
+    def put_request(self, rid: str, fields: Mapping[str, Any]) -> None:
+        """Persist a request's host-retained recovery state (tokens etc.)
+        as an npz of named arrays."""
+        buf = io.BytesIO()
+        np.savez(buf, **{k: _canon(v) for k, v in fields.items()})
+        with self._lock, self._conn:
+            self._conn.execute(
+                "INSERT INTO requests(rid, payload, updated_at) VALUES(?,?,?) "
+                "ON CONFLICT(rid) DO UPDATE SET payload=excluded.payload, "
+                "  updated_at=excluded.updated_at",
+                (rid, buf.getvalue(), time.time()))
+
+    def get_request(self, rid: str) -> dict[str, np.ndarray] | None:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT payload FROM requests WHERE rid=?", (rid,)).fetchone()
+        if row is None:
+            return None
+        with np.load(io.BytesIO(row[0])) as z:
+            return {k: z[k] for k in z.files}
+
+    def get_requests(self) -> dict[str, dict[str, np.ndarray]]:
+        with self._lock:
+            rids = [r[0] for r in self._conn.execute(
+                "SELECT rid FROM requests").fetchall()]
+        return {rid: req for rid in rids
+                if (req := self.get_request(rid)) is not None}
+
+    def delete_request(self, rid: str) -> None:
+        with self._lock, self._conn:
+            self._conn.execute("DELETE FROM requests WHERE rid=?", (rid,))
+
+    # -- meta / hygiene ----------------------------------------------------
+    def set_meta(self, k: str, v: str) -> None:
+        with self._lock, self._conn:
+            self._conn.execute(
+                "INSERT INTO meta(k, v) VALUES(?,?) "
+                "ON CONFLICT(k) DO UPDATE SET v=excluded.v", (k, v))
+
+    def get_meta(self, k: str) -> str | None:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT v FROM meta WHERE k=?", (k,)).fetchone()
+        return row[0] if row else None
+
+    def check_leaks(self) -> list[str]:
+        """Store hygiene after a run fully drains: no rows stuck ``running``
+        on a dead worker, no orphaned spill files.  Returns human-readable
+        problems (empty list == clean) — the crash-soak asserts on this."""
+        problems: list[str] = []
+        with self._lock:
+            stuck = self._conn.execute(
+                "SELECT j.key, j.worker FROM jobs j "
+                "LEFT JOIN workers w ON j.worker = w.wid "
+                "WHERE j.state='running' AND (w.alive IS NULL OR w.alive=0)"
+            ).fetchall()
+            spills = {r[0] for r in self._conn.execute(
+                "SELECT spill FROM jobs WHERE spill IS NOT NULL").fetchall()}
+        for key, wid in stuck:
+            problems.append(f"job {key[:12]} stuck running on dead worker {wid}")
+        if os.path.isdir(self.spill_dir):
+            for fname in os.listdir(self.spill_dir):
+                if fname.endswith(".tmp") or fname not in spills:
+                    problems.append(f"orphan spill file {fname}")
+        return problems

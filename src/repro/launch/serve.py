@@ -113,9 +113,14 @@ def make_scheduler(cfg, params, args, *, sp: SamplingParams,
         eng = Engine(cfg, params, batch=args.batch, max_len=max_len)
     tracker = None
     if args.engine == "hypar":
+        jobstore = None
+        if getattr(args, "store", ""):
+            from repro.core.store import JobStore
+            jobstore = JobStore(args.store)
         n_params = sum(x.size for x in jax.tree.leaves(params))
         tracker = HyParRequestTracker(args.batch, strategy=args.strategy,
-                                      flops_per_token=2.0 * n_params)
+                                      flops_per_token=2.0 * n_params,
+                                      jobstore=jobstore)
     buckets = sorted({1 << (int(l) - 1).bit_length() for l in args.prompt_lens
                       if l < max_len} | {16})
     return ServeScheduler(eng, sp=sp, tracker=tracker, buckets=buckets,
@@ -188,6 +193,11 @@ def replay_trace(sched, reqs) -> tuple:
 def run_trace(cfg, params, args, *, sp: SamplingParams,
               repeats: int = 1) -> dict:
     sched, reqs = prepare_trace(cfg, params, args, sp=sp)
+    if getattr(args, "resume", False):
+        # master restart: re-seed suspended-request records from the durable
+        # store — resubmitted rids resume by recompute (DESIGN.md §12)
+        n = sched.restore_suspended()
+        print(f"restored {n} suspended request(s) from {args.store}")
     # ``repeats``: replay the SAME trace N times on the warmed scheduler and
     # keep the fastest replay — the serve benchmark's noise floor on shared
     # CI/CPU boxes is far above the engine differences it wants to resolve,
@@ -349,7 +359,22 @@ def main(argv=None):
                     help="trace mode: every prompt opens with the same "
                          "token prefix of this length (system-prompt "
                          "workload; pairs with --prefix-cache)")
+    ap.add_argument("--store", default="",
+                    help="hypar engine: durable job-store path — suspended "
+                         "requests' host-retained tokens persist, so "
+                         "recovery survives a master restart (DESIGN.md "
+                         "§12)")
+    ap.add_argument("--resume", action="store_true",
+                    help="hypar engine: re-seed suspended requests from "
+                         "--store before replaying (requires --reserve "
+                         "demand)")
     args = ap.parse_args(argv)
+    if (args.store or args.resume) and args.engine != "hypar":
+        ap.error("--store/--resume require --engine hypar (the tracker "
+                 "owns the durable store)")
+    if args.resume and not (args.store and args.reserve == "demand"):
+        ap.error("--resume needs --store and --reserve demand (resume "
+                 "recompute is the demand-mode recovery path)")
     if args.paged and not args.trace:
         ap.error("--paged requires --trace (wave mode is dense-only)")
     if args.reserve == "demand" and not args.paged:

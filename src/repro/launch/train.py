@@ -77,15 +77,34 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config unchanged")
-    ap.add_argument("--engine", choices=["fused", "hypar"], default="fused",
+    ap.add_argument("--engine", choices=["fused", "hypar", "proc"],
+                    default="fused",
                     help="fused = tailored SPMD step; hypar = the paper's "
-                         "job-graph runtime (BaseExecutor, DESIGN.md §2)")
+                         "job-graph runtime (BaseExecutor, DESIGN.md §2); "
+                         "proc = the same job graph on real multiprocessing "
+                         "workers with a durable job store (DESIGN.md §12)")
     ap.add_argument("--dispatch", choices=["sync", "pipelined", "dataflow"],
                     default="sync", help="LocalExecutor dispatch mode "
-                                         "(hypar engine only)")
+                                         "(hypar/proc engines)")
     ap.add_argument("--placement", choices=["greedy", "cost"], default="greedy",
                     help="master-scheduler placement strategy (hypar engine)")
+    ap.add_argument("--store", default="",
+                    help="proc engine: sqlite job-store path — results "
+                         "persist under content identity, so a killed run "
+                         "restarted with --resume skips every job already "
+                         "done (default: a fresh temporary store)")
+    ap.add_argument("--resume", action="store_true",
+                    help="proc engine: reuse an existing --store instead of "
+                         "starting it fresh (memoised jobs are served from "
+                         "the store, not re-executed)")
+    ap.add_argument("--proc-workers", type=int, default=2,
+                    help="proc engine: number of worker processes")
     args = ap.parse_args(argv)
+    if (args.store or args.resume) and args.engine != "proc":
+        ap.error("--store/--resume require --engine proc")
+    if args.resume and not args.store:
+        ap.error("--resume needs --store (a temporary store has no "
+                 "previous run to resume from)")
 
     base = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = base if args.smoke else scale_config(
@@ -102,7 +121,7 @@ def main(argv=None):
     dc = DataConfig(seed=args.seed, global_batch=args.batch, seq_len=args.seq)
     stream = SyntheticLMStream(cfg, dc)
 
-    if args.engine == "hypar":
+    if args.engine in ("hypar", "proc"):
         return _run_hypar(cfg, spec, stream, args)
 
     with use_rules(mesh, rules.rules):
@@ -160,7 +179,11 @@ def _run_hypar(cfg, spec, stream, args) -> float:
 
     Same BaseExecutor contract as every other consumer: the dispatch mode
     and placement strategy are plain LocalExecutor knobs, nothing here
-    special-cases them.
+    special-cases them.  ``--engine proc`` swaps the thread workers for the
+    durable ProcessExecutor (DESIGN.md §12): the trainer's functions run in
+    spawn children via ``repro.train.procfns`` and every job result lands in
+    the sqlite store, so a killed run restarted with ``--resume`` replays
+    the done prefix as memo hits.
     """
     from repro.train import HyParTrainer
 
@@ -171,15 +194,46 @@ def _run_hypar(cfg, spec, stream, args) -> float:
         b = stream.batch(s)
         batches.append([{k: jnp.asarray(v[m * mb:(m + 1) * mb])
                          for k, v in b.items()} for m in range(n_micro)])
+
+    factory, made = None, []
+    if args.engine == "proc":
+        from repro.core import ProcessExecutor, VirtualCluster
+        from repro.train import procfns
+
+        store = args.store or None
+        if store and not args.resume:
+            for stale in (store, store + "-wal", store + "-shm"):
+                if os.path.exists(stale):
+                    os.remove(stale)
+        procfns.export_env(cfg, spec, batch_keys=batches[0][0])
+        proc_cluster = VirtualCluster(n_schedulers=1,
+                                      max_workers=args.proc_workers)
+
+        def factory(cluster, registry):
+            ex = ProcessExecutor(
+                cluster, registry, procfns.WORKER_FNS_SPEC, store=store,
+                mode=("pipelined" if args.dispatch == "sync"
+                      else args.dispatch),
+                strategy=args.placement)
+            made.append(ex)
+            return ex
+
     trainer = HyParTrainer(cfg, spec, n_micro=n_micro,
-                           mode=args.dispatch, strategy=args.placement)
+                           cluster=(proc_cluster if factory else None),
+                           mode=args.dispatch, strategy=args.placement,
+                           executor_factory=factory)
     t0 = time.time()
     params, _, report = trainer.run(batches, key=jax.random.PRNGKey(args.seed))
     dt = time.time() - t0
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"hypar engine: {args.steps} steps x {n_micro} micro in {dt:.1f}s "
-          f"({args.steps * args.batch * args.seq / dt:.0f} tok/s) "
+    print(f"{args.engine} engine: {args.steps} steps x {n_micro} micro in "
+          f"{dt:.1f}s ({args.steps * args.batch * args.seq / dt:.0f} tok/s) "
           f"params={n_params / 1e6:.1f}M | {report.summary()}")
+    if made:
+        ex = made[0]
+        print(f"job store: {ex.n_executed} executed, "
+              f"{ex.n_memoised} memoised"
+              + (f" (durable at {args.store})" if args.store else ""))
     return dt
 
 

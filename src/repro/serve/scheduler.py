@@ -43,6 +43,7 @@ from repro.core.job import ChunkedData, Job, JobGraph, ParallelSegment
 from repro.core.registry import ControlContext, FunctionKind, FunctionRegistry
 from repro.core.scheduler import (CostModelParams, MasterScheduler,
                                   ResultStore, VirtualCluster)
+from repro.core.store import JobStore
 
 from .engine import Engine, PagedEngine, SamplingParams, chunk_plan
 from .prefix import PrefixCache
@@ -335,11 +336,17 @@ class HyParRequestTracker:
     ADMIT_FN = "serve.admit"
     DECODE_FN = "serve.decode"
 
+    #: key prefix for suspended-request rows in the durable job store —
+    #: keeps serve recovery state apart from any other ``requests`` users
+    #: sharing the same sqlite file (e.g. a ProcessExecutor run)
+    STORE_PREFIX = "serve.suspended:"
+
     def __init__(self, n_slots: int, *, strategy: str = "greedy",
                  cost_params: CostModelParams | None = None,
                  devices: Sequence[Any] | None = None,
                  flops_per_token: float = 0.0,
-                 registry: FunctionRegistry | None = None):
+                 registry: FunctionRegistry | None = None,
+                 jobstore: "JobStore | None" = None):
         devices = list(devices if devices is not None else jax.devices())
         self.n_slots = n_slots
         self.cluster = VirtualCluster(devices, max_workers=n_slots)
@@ -358,6 +365,7 @@ class HyParRequestTracker:
         self.wid_to_slot = {i: i for i in range(n_slots)}
         self._job_of: dict[int, Job] = {}
         self._pending_jobs: list[Job] = []
+        self.jobstore = jobstore
         self.n_recovered = 0
         self.n_preempted = 0
 
@@ -428,12 +436,52 @@ class HyParRequestTracker:
         worker.jobs_done += 1
 
     def retire(self, req: Request) -> None:
-        """Result delivered: release the retained data, GC the dynamic job."""
+        """Result delivered: release the retained data, GC the dynamic job
+        and drop any durable resume state — the request is over."""
+        self.drop_suspended(req.rid)
         job = self._job_of.pop(req.rid, None)
         if job is None:
             return
         self.store.release(job.name)
         self.graph.remove_job(job.name)
+
+    # -- durable resume state (DESIGN.md §12) ----------------------------------
+    def persist_suspended(self, rid: int, tokens: Sequence[int],
+                          token_s: Sequence[float],
+                          n_preempts: int) -> None:
+        """Write a suspended request's host-retained tokens to the durable
+        job store.  The device KV is already gone (that is what suspension
+        means); with this row even the *master's* host copy is expendable —
+        a restarted serving process re-seeds its suspended table from the
+        store and resumes by the usual chunked recompute."""
+        if self.jobstore is None:
+            return
+        self.jobstore.put_request(
+            f"{self.STORE_PREFIX}{rid}",
+            {"tokens": np.asarray(tokens, np.int64),
+             "token_s": np.asarray(token_s, np.float64),
+             "n_preempts": np.asarray(n_preempts, np.int64)})
+
+    def drop_suspended(self, rid: int) -> None:
+        if self.jobstore is not None:
+            self.jobstore.delete_request(f"{self.STORE_PREFIX}{rid}")
+
+    def restore_suspended(self) -> dict[int, tuple[list[int], list[float], int]]:
+        """Read every persisted suspended-request record back:
+        ``{rid: (tokens, token_s, n_preempts)}``.  Rids are stable across a
+        master restart when requests are resubmitted in the original order
+        (``RequestQueue`` numbers from zero)."""
+        if self.jobstore is None:
+            return {}
+        out: dict[int, tuple[list[int], list[float], int]] = {}
+        for key, fields in self.jobstore.get_requests().items():
+            if not key.startswith(self.STORE_PREFIX):
+                continue
+            rid = int(key[len(self.STORE_PREFIX):])
+            out[rid] = ([int(t) for t in fields["tokens"]],
+                        [float(t) for t in fields["token_s"]],
+                        int(np.asarray(fields["n_preempts"]).reshape(-1)[0]))
+        return out
 
     def preempt(self, req: Request) -> None:
         """The request's pages were reclaimed: its dynamic job returns to
@@ -607,6 +655,27 @@ class ServeScheduler:
     @property
     def prefix_cache_active(self) -> bool:
         return self.prefix is not None
+
+    def restore_suspended(self) -> int:
+        """Re-seed the suspended-request table from the tracker's durable
+        job store (master restart, DESIGN.md §12).  Call after constructing
+        the scheduler and BEFORE resubmitting: requests resubmitted in the
+        original order get their original rids back, so a restored record
+        turns their admission into a resume — chunked recompute of prompt +
+        retained tokens instead of regenerating from scratch.  Returns the
+        number of records restored.  No-op without a demand-mode tracker
+        backed by a store."""
+        if self.tracker is None or not self.demand:
+            return 0
+        n = 0
+        for rid, (tokens, token_s, n_pre) in \
+                self.tracker.restore_suspended().items():
+            if rid in self._suspended or not tokens:
+                continue
+            self._suspended[rid] = _Suspended(tokens=tokens, token_s=token_s,
+                                              n_preempts=n_pre)
+            n += 1
+        return n
 
     # -- submission ------------------------------------------------------------
     def submit(self, tokens, max_new: int, *, enc_embeds=None,
@@ -960,9 +1029,13 @@ class ServeScheduler:
         """Record the slot's generated tokens as the resume state of its
         request (preemption, or worker failure under demand mode)."""
         prev = self._suspended.get(st.request.rid)
-        self._suspended[st.request.rid] = _Suspended(
+        sus = _Suspended(
             tokens=list(st.tokens), token_s=list(st.token_s),
             n_preempts=(prev.n_preempts + 1 if prev else 1))
+        self._suspended[st.request.rid] = sus
+        if self.tracker is not None:
+            self.tracker.persist_suspended(st.request.rid, sus.tokens,
+                                           sus.token_s, sus.n_preempts)
 
     def _preempt(self, st: SlotState) -> None:
         """Reclaim the slot's pages: retain the generated tokens host-side,
@@ -1082,6 +1155,10 @@ class ServeScheduler:
             # failed mid-resume-prefill: the retained tokens are still the
             # suspended record — put it back for the next resume attempt
             self._suspended[req.rid] = st.resume
+            if self.tracker is not None:
+                self.tracker.persist_suspended(
+                    req.rid, st.resume.tokens, st.resume.token_s,
+                    st.resume.n_preempts)
         self._release_slot(st)
         if req is not None:
             st.request, st.finished = None, False

@@ -43,10 +43,15 @@ class HyParTrainer:
     def __init__(self, cfg: ModelConfig, spec: OptimizerSpec, *,
                  n_micro: int = 2, cluster: VirtualCluster | None = None,
                  dynamic: bool = True, mode: str = "sync",
-                 strategy: str = "greedy"):
+                 strategy: str = "greedy",
+                 executor_factory: Callable[..., Any] | None = None):
         self.cfg, self.spec, self.n_micro = cfg, spec, n_micro
         self.dynamic = dynamic
         self.mode, self.strategy = mode, strategy
+        # executor injection: ``factory(cluster, registry) -> BaseExecutor``
+        # swaps the thread-worker LocalExecutor for e.g. the durable
+        # ProcessExecutor without the trainer special-casing either
+        self.executor_factory = executor_factory
         self.cluster = cluster or VirtualCluster(n_schedulers=1)
         self.registry = FunctionRegistry()
         self._params_def = None
@@ -149,9 +154,17 @@ class HyParTrainer:
             p_ref, o_ref = self._one_step_segments(graph, s, params_ref=p_ref,
                                                    opt_ref=o_ref)
 
-        executor = LocalExecutor(self.cluster, self.registry, mode=self.mode,
-                                 strategy=self.strategy)
-        results, report = executor.run(graph)
+        if self.executor_factory is not None:
+            executor = self.executor_factory(self.cluster, self.registry)
+        else:
+            executor = LocalExecutor(self.cluster, self.registry,
+                                     mode=self.mode, strategy=self.strategy)
+        try:
+            results, report = executor.run(graph)
+        finally:
+            close = getattr(executor, "close", None)
+            if close is not None:
+                close()
         final_p = jax.tree_util.tree_unflatten(self._params_def,
                                                results[p_ref].arrays())
         final_o = jax.tree_util.tree_unflatten(self._opt_def,

@@ -1,0 +1,132 @@
+"""Spawn-side training function table for the process-worker runtime.
+
+``ProcessExecutor`` children resolve their functions from a
+``"module:attr"`` spec and never see the master's registry —
+:class:`~repro.train.hypar_loop.HyParTrainer`'s registered functions are
+closures over the trainer instance and cannot cross a spawn boundary.  This
+module provides the same fids (``grad``/``opt``/``take_params``/``take_opt``/
+``data``) as module-level functions: the master serialises the model config,
+optimizer spec and microbatch keys into ``REPRO_TRAIN_PROCFNS`` (spawn
+children inherit the environment) via :func:`export_env` **before** the
+executor starts its workers, and each child rebuilds the pytree treedefs
+locally from the same deterministic init path.
+
+Unlike the rest of the child-side runtime this module's functions DO import
+jax in the worker process — training gradients are jax computations.  The
+import happens lazily inside the functions, so merely resolving the table
+stays cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+__all__ = ["FNS", "WORKER_FNS_SPEC", "ENV_KEY", "export_env"]
+
+WORKER_FNS_SPEC = "repro.train.procfns:FNS"
+ENV_KEY = "REPRO_TRAIN_PROCFNS"
+
+_CTX = None
+
+
+def export_env(cfg, spec, batch_keys) -> None:
+    """Master side: stage the training setup for spawn children."""
+    os.environ[ENV_KEY] = json.dumps({
+        "cfg": dataclasses.asdict(cfg),
+        "spec": dataclasses.asdict(spec),
+        "batch_keys": sorted(batch_keys),
+    })
+
+
+class _Ctx:
+    def __init__(self):
+        import jax
+        from repro.models.config import ModelConfig
+        from repro.models.transformer import init_params
+        from repro.optim import OptimizerSpec, init_opt_state
+
+        raw = os.environ.get(ENV_KEY)
+        if not raw:
+            raise RuntimeError(
+                f"{ENV_KEY} is not set — the master must call "
+                f"repro.train.procfns.export_env(cfg, spec, batch_keys) "
+                f"before spawning process workers")
+        d = json.loads(raw)
+        self.cfg = ModelConfig(**d["cfg"])
+        self.spec = OptimizerSpec(**d["spec"])
+        # treedefs come from the same init path the master used — the child
+        # only ever receives flat leaf lists, never pytrees
+        params = init_params(self.cfg, jax.random.PRNGKey(0))
+        opt = init_opt_state(self.spec, params)
+        self.params_def = jax.tree_util.tree_structure(params)
+        self.opt_def = jax.tree_util.tree_structure(opt)
+        self.n_p = self.params_def.num_leaves
+        self.batch_def = jax.tree_util.tree_structure(
+            {k: 0 for k in d["batch_keys"]})
+
+
+def _ctx() -> _Ctx:
+    global _CTX
+    if _CTX is None:
+        _CTX = _Ctx()
+    return _CTX
+
+
+def _leaves(tree) -> list[np.ndarray]:
+    import jax
+    return [np.asarray(x) for x in jax.tree.leaves(tree)]
+
+
+def grad(params_chunks, micro_chunks):
+    import jax
+    import jax.numpy as jnp
+    from repro.models.transformer import loss_fn
+
+    c = _ctx()
+    params = jax.tree_util.tree_unflatten(
+        c.params_def, [jnp.asarray(a) for a in params_chunks])
+    batch = jax.tree_util.tree_unflatten(
+        c.batch_def, [jnp.asarray(a) for a in micro_chunks])
+    (_, _), grads = jax.value_and_grad(
+        lambda p: loss_fn(c.cfg, p, batch), has_aux=True)(params)
+    return _leaves(grads)
+
+
+def opt(params_chunks, opt_chunks, *grad_chunk_lists):
+    import jax
+    import jax.numpy as jnp
+    from repro.optim import opt_update
+
+    c = _ctx()
+    params = jax.tree_util.tree_unflatten(
+        c.params_def, [jnp.asarray(a) for a in params_chunks])
+    opt_state = jax.tree_util.tree_unflatten(
+        c.opt_def, [jnp.asarray(a) for a in opt_chunks])
+    grads_sum = None
+    for gc in grad_chunk_lists:
+        g = jax.tree_util.tree_unflatten(
+            c.params_def, [jnp.asarray(a) for a in gc])
+        grads_sum = g if grads_sum is None else jax.tree.map(
+            jnp.add, grads_sum, g)
+    grads = jax.tree.map(lambda g: g / len(grad_chunk_lists), grads_sum)
+    new_p, new_o, _ = opt_update(c.spec, grads, opt_state, params)
+    return _leaves(new_p) + _leaves(new_o)
+
+
+def take_params(full_chunks):
+    return [np.asarray(a) for a in full_chunks[:_ctx().n_p]]
+
+
+def take_opt(full_chunks):
+    return [np.asarray(a) for a in full_chunks[_ctx().n_p:]]
+
+
+def data(chunks):
+    return [np.asarray(a) for a in chunks]
+
+
+FNS = {"grad": grad, "opt": opt, "take_params": take_params,
+       "take_opt": take_opt, "data": data}

@@ -1,0 +1,31 @@
+"""Standalone master process for the crash-soak test.
+
+Runs one ProcessExecutor pass of the ``repro.apps.procdemo`` graph against
+a durable store.  Must be a real file (not ``python -c``/stdin): spawn
+children re-resolve ``__main__`` from its path, so an inline script would
+crash every worker at boot.  The soak test launches this under
+``REPRO_PROCDEMO_SLEEP`` and SIGKILLs it mid-run.
+"""
+import sys
+
+
+def main() -> None:
+    store = sys.argv[1]
+    width, depth, dim, seed = (int(a) for a in sys.argv[2:6])
+    from repro.apps import procdemo
+    from repro.core import ProcessExecutor, VirtualCluster
+
+    ex = ProcessExecutor(VirtualCluster(n_schedulers=1, max_workers=2),
+                         procdemo.make_registry(), procdemo.WORKER_FNS_SPEC,
+                         store=store, heartbeat_interval_s=0.1,
+                         heartbeat_max_missed=3)
+    try:
+        ex.run(procdemo.build_graph(width=width, depth=depth, dim=dim,
+                                    seed=seed))
+        print("DONE", ex.n_executed, ex.n_memoised, flush=True)
+    finally:
+        ex.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -150,6 +150,88 @@ def test_recovery_is_recursive_through_lineage(mode):
     assert sorted(set(rep.recovered_jobs)) == ["A", "B"]
 
 
+def test_dataflow_kill_before_segment_with_dynamic_jobs():
+    """Kill-before-segment under ``mode="dataflow"`` where the target
+    segment's jobs were added *dynamically* by a control job: the kill lands
+    between dataflow frontier waves (no segment barrier exists to hide
+    behind) and the retained shard must be recovered for the dynamic
+    consumers."""
+    from repro.core import ControlContext, FunctionKind
+
+    reg = FunctionRegistry()
+
+    @reg.chunkwise("sq")
+    def sq(c):
+        return c * c
+
+    def plan(cd, ctx):
+        # enqueue one consumer per retained chunk into the NEXT segment
+        for i in range(2):
+            ctx.add_job(Job(f"DYN{i}", "sq", 1, (ChunkRef("P"),),
+                            no_send_back=True), 1)
+        return ChunkedData.from_arrays([np.zeros(1, np.float32)])
+
+    reg.register("plan", plan, kind=FunctionKind.CONTROL)
+
+    g = JobGraph()
+    g.add_segment([Job("P", "sq", 1, no_send_back=True)])
+    g.add_segment([Job("C", "plan", 1, (ChunkRef("P"),))])
+    g.bind_input("P", np.arange(4, dtype=np.float32), n_chunks=2)
+
+    inj = FaultInjector().kill_before_segment(worker=0, segment=2)
+    ex = ChaosLocalExecutor(VirtualCluster(n_schedulers=1, max_workers=2),
+                            reg, inj, mode="dataflow")
+    res, rep = ex.run(g)
+    assert inj.killed == [0]
+    assert "P" in rep.recovered_jobs
+    expected = float((np.arange(4, dtype=np.float32) ** 4).sum())
+    for i in range(2):
+        got = float(np.asarray(res[f"DYN{i}"].to_array()).sum())
+        assert got == pytest.approx(expected), f"DYN{i}"
+
+
+def test_maybe_kill_targets_wid_not_list_index():
+    """After the worker list and wids diverge (a dead worker reaped from
+    the list), a fault plan for wid=1 must kill worker 1 — not whatever
+    happens to sit at index 1."""
+    from repro.core import FaultInjector, ResultStore
+
+    cluster = VirtualCluster(n_schedulers=1, max_workers=3)
+    w0 = cluster.spawn_worker()
+    w1 = cluster.spawn_worker()
+    w2 = cluster.spawn_worker()
+    cluster.workers.remove(w0)          # list index 1 now holds wid 2
+    store = ResultStore(cluster)
+    inj = FaultInjector().kill_after_jobs(worker=1, n=0)
+    inj.maybe_kill(cluster, store)
+    assert inj.killed == [1]
+    assert not w1.alive
+    assert w2.alive
+
+
+def test_heartbeat_replacement_worker_gets_registration_grace():
+    """A worker spawned after ``max_missed`` silent rounds must not be
+    reaped on the very next tick before it ran a single job."""
+    from repro.core import Heartbeat, ResultStore
+
+    cluster = VirtualCluster(n_schedulers=1, max_workers=2)
+    w0 = cluster.spawn_worker()
+    store = ResultStore(cluster)
+    hb = Heartbeat(cluster, max_missed=2)
+    hb.beat(w0.wid)
+    for _ in range(4):
+        hb.tick(store)
+    assert not w0.alive                  # silent original: reaped
+    repl = cluster.spawn_worker()
+    hb.register(repl.wid)
+    hb.tick(store)                       # previously killed repl here
+    assert repl.alive
+    # silence *after* registration still reaps it eventually
+    for _ in range(3):
+        hb.tick(store)
+    assert not repl.alive
+
+
 def test_async_report_matches_sync_recovery_accounting():
     """Same fault plan, same graph: the async modes must report the same
     recovered set as the sync baseline."""

@@ -383,3 +383,107 @@ def test_fail_slot_under_demand_resumes_with_retained_tokens(qwen):
     # re-prefilled prompt + retained tokens
     assert sched.resume_tokens_recomputed >= len(prompt) + n_before - 1
     assert sched.allocator.n_outstanding == 0
+
+
+def test_fail_slot_mid_resume_prefill_recovers_and_persists(qwen, tmp_path):
+    """The worker dies AGAIN while the resume prefill is still chunking:
+    the retained tokens must survive the second failure (the in-memory
+    record moved onto the slot; ``fail_slot`` puts it back), the durable
+    store must hold them throughout, and the eventual result still
+    bit-matches the unfailed run."""
+    from repro.core.store import JobStore
+
+    cfg, params = qwen
+    rng = np.random.default_rng(26)
+    prompt = _prompt(rng, cfg, 20)             # resume stream spans 2 chunks
+    [ref] = _reference_tokens(cfg, params, [prompt], max_new=8)
+
+    jobstore = JobStore(tmp_path / "serve.sqlite")
+    tracker = HyParRequestTracker(2, jobstore=jobstore)
+    eng = PagedEngine(cfg, params, batch=2, max_len=64, page_size=8,
+                      prefill_chunk=16)
+    sched = ServeScheduler(eng, reserve="demand", tracker=tracker)
+    try:
+        rid = sched.submit(prompt, max_new=8)
+        for _ in range(4):                     # prefill + a few tokens
+            assert sched.step()
+        st = next(s for s in sched.slots if s.request is not None)
+        tokens_before = list(st.tokens)
+        assert len(tokens_before) >= 2
+        assert sched.fail_slot(st.slot) == rid
+        # first failure persisted the retained tokens durably
+        assert tracker.restore_suspended()[rid][0] == tokens_before
+
+        # step until the resume prefill is mid-flight, then fail it again
+        mid = None
+        for _ in range(30):
+            mid = next((s for s in sched.slots
+                        if s.resume is not None and s.prefilling), None)
+            if mid is not None:
+                break
+            assert sched.step()
+        assert mid is not None, "resume never went mid-prefill"
+        assert sched.fail_slot(mid.slot) == rid
+        # the record moved back intact: a failed resume retry is NOT a new
+        # preemption, so the counter stays put
+        assert sched._suspended[rid].tokens == tokens_before
+        assert sched._suspended[rid].n_preempts == 1
+        assert tracker.restore_suspended()[rid][0] == tokens_before
+
+        results = sched.run()
+        assert [r.rid for r in results] == [rid]
+        assert results[0].tokens == ref
+        # two failures → the resume recompute ran (at least) twice
+        assert sched.resume_tokens_recomputed >= 2 * (len(prompt)
+                                                      + len(tokens_before) - 1)
+        assert sched.allocator.n_outstanding == 0
+        # retirement dropped the durable record
+        assert tracker.restore_suspended() == {}
+    finally:
+        jobstore.close()
+
+
+def test_master_restart_restores_suspended_from_store(qwen, tmp_path):
+    """Kill the MASTER while a request sits preempted: a fresh scheduler
+    over the same store re-seeds the suspended table, the resubmitted
+    request (same rid — submission order reproduces) resumes by recompute
+    instead of regenerating, and the output bit-matches."""
+    from repro.core.store import JobStore
+
+    cfg, params = qwen
+    rng = np.random.default_rng(27)
+    prompt = _prompt(rng, cfg, 9)
+    [ref] = _reference_tokens(cfg, params, [prompt], max_new=8)
+
+    def make(store_path):
+        jobstore = JobStore(store_path)
+        tracker = HyParRequestTracker(2, jobstore=jobstore)
+        eng = PagedEngine(cfg, params, batch=2, max_len=64, page_size=8,
+                          prefill_chunk=16)
+        return jobstore, ServeScheduler(eng, reserve="demand",
+                                        tracker=tracker)
+
+    path = tmp_path / "serve.sqlite"
+    store_a, sched_a = make(path)
+    rid_a = sched_a.submit(prompt, max_new=8)
+    for _ in range(4):
+        assert sched_a.step()
+    st = next(s for s in sched_a.slots if s.request is not None)
+    n_retained = len(st.tokens)
+    assert n_retained >= 2
+    assert sched_a.fail_slot(st.slot) == rid_a
+    store_a.close()                            # "master dies" here
+
+    store_b, sched_b = make(path)
+    try:
+        assert sched_b.restore_suspended() == 1
+        rid_b = sched_b.submit(prompt, max_new=8)
+        assert rid_b == rid_a                  # rids reproduce from zero
+        results = sched_b.run()
+        assert [r.rid for r in results] == [rid_b]
+        assert results[0].tokens == ref
+        # the restart resumed: it recomputed prompt + retained tokens
+        assert sched_b.resume_tokens_recomputed >= len(prompt) + n_retained - 1
+        assert sched_b.tracker.restore_suspended() == {}
+    finally:
+        store_b.close()

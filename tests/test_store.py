@@ -1,0 +1,177 @@
+"""Unit tests for the sqlite JobStore (tier-1: hermetic tmp-path stores,
+no cross-test DB reuse, no processes)."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.store import JobStore, job_key
+
+
+@pytest.fixture
+def store(tmp_path):
+    s = JobStore(tmp_path / "jobs.sqlite")
+    yield s
+    s.close()
+
+
+# -- content identity ------------------------------------------------------
+
+def test_job_key_deterministic_and_input_sensitive():
+    a = np.arange(6, dtype=np.float32).reshape(2, 3)
+    k1 = job_key("fn", [a])
+    assert k1 == job_key("fn", [a.copy()])
+    assert k1 != job_key("other_fn", [a])
+    assert k1 != job_key("fn", [a + 1])
+    assert k1 != job_key("fn", [a.astype(np.float64)])
+    assert k1 != job_key("fn", [a.reshape(3, 2)])
+
+
+def test_job_key_ignores_memory_layout():
+    a = np.arange(9, dtype=np.float64).reshape(3, 3)
+    assert job_key("fn", [a.T]) == job_key("fn", [np.ascontiguousarray(a.T)])
+
+
+# -- results ---------------------------------------------------------------
+
+def test_result_roundtrip_inline(store):
+    arrays = [np.arange(5.0), np.ones((2, 2), np.int32)]
+    store.put_result("k1", arrays, name="J1", fn="f")
+    assert store.state("k1") == "done"
+    got = store.load_result("k1")
+    assert len(got) == 2
+    for a, b in zip(arrays, got):
+        np.testing.assert_array_equal(a, b)
+        assert a.dtype == b.dtype
+
+
+def test_result_spills_above_threshold(tmp_path):
+    s = JobStore(tmp_path / "jobs.sqlite", spill_bytes=256)
+    try:
+        big = np.random.default_rng(0).standard_normal((64, 64))
+        s.put_result("big", [big])
+        files = os.listdir(s.spill_dir)
+        assert files == ["big.npz"]
+        np.testing.assert_array_equal(s.load_result("big")[0], big)
+        assert s.check_leaks() == []
+    finally:
+        s.close()
+
+
+def test_load_result_misses(store):
+    assert store.load_result("nope") is None
+    store.mark_running("k", name="J", fn="f", worker=0)
+    assert store.load_result("k") is None  # running, not done
+
+
+# -- job state machine -----------------------------------------------------
+
+def test_running_then_done_then_running_stays_done(store):
+    store.mark_running("k", name="J", fn="f", worker=1)
+    assert store.state("k") == "running"
+    store.put_result("k", [np.zeros(2)], worker=1)
+    assert store.state("k") == "done"
+    # a concurrent claim after completion must not regress the state
+    store.mark_running("k", worker=2)
+    assert store.state("k") == "done"
+
+
+def test_worker_death_loses_only_its_running_jobs(store):
+    store.register_worker(0)
+    store.register_worker(1)
+    store.mark_running("r0", worker=0)
+    store.mark_running("r1", worker=1)
+    store.put_result("d0", [np.ones(1)], worker=0)
+    lost = store.mark_worker_jobs_lost(0)
+    assert lost == ["r0"]
+    assert store.state("r0") == "lost"
+    assert store.state("r1") == "running"
+    assert store.state("d0") == "done"  # persisted results survive the death
+    assert store.bump_retries("r0") == 1
+    assert store.counts() == {"lost": 1, "running": 1, "done": 1}
+
+
+# -- heartbeats ------------------------------------------------------------
+
+def test_registration_counts_as_first_beat(store):
+    store.register_worker(0, pid=123)
+    assert store.expired(10.0) == []
+    hb = store.heartbeats()
+    assert set(hb) == {0}
+    assert time.time() - hb[0] < 5.0
+
+
+def test_expiry_is_discovered_not_announced(store):
+    store.register_worker(0)
+    store.register_worker(1)
+    time.sleep(0.05)
+    store.beat(1)
+    assert store.expired(0.04) == [0]
+    store.mark_worker_dead(0)
+    assert store.heartbeats().keys() == {1}
+    assert store.expired(0.04) == []
+
+
+# -- serve request persistence --------------------------------------------
+
+def test_request_roundtrip_and_delete(store):
+    store.put_request("r1", {"tokens": np.array([1, 2, 3]),
+                             "token_s": np.array(42.5)})
+    store.put_request("r1", {"tokens": np.array([1, 2, 3, 4]),
+                             "token_s": np.array(42.5)})
+    reqs = store.get_requests()
+    assert list(reqs) == ["r1"]
+    np.testing.assert_array_equal(reqs["r1"]["tokens"], [1, 2, 3, 4])
+    store.delete_request("r1")
+    assert store.get_requests() == {}
+    assert store.get_request("r1") is None
+
+
+# -- hygiene ---------------------------------------------------------------
+
+def test_check_leaks_flags_stuck_jobs_and_orphan_spills(tmp_path):
+    s = JobStore(tmp_path / "jobs.sqlite", spill_bytes=64)
+    try:
+        s.register_worker(0)
+        s.mark_running("stuck", worker=0)
+        s.mark_worker_dead(0)
+        os.makedirs(s.spill_dir, exist_ok=True)
+        with open(os.path.join(s.spill_dir, "junk.npz"), "wb") as f:
+            f.write(b"x")
+        problems = s.check_leaks()
+        assert any("stuck" in p for p in problems)
+        assert any("junk.npz" in p for p in problems)
+        s.put_result("stuck", [np.zeros(64)], worker=0)
+        os.remove(os.path.join(s.spill_dir, "junk.npz"))
+        assert s.check_leaks() == []
+    finally:
+        s.close()
+
+
+def test_concurrent_writers_share_one_store(tmp_path):
+    """Many threads hammering one connection (the in-process contract; the
+    cross-process contract is WAL + busy_timeout, exercised by the
+    procworker tests)."""
+    s = JobStore(tmp_path / "jobs.sqlite")
+    try:
+        def work(i):
+            for j in range(20):
+                s.put_result(f"k{i}_{j}", [np.full(3, i * 100 + j)])
+        threads = [threading.Thread(target=work, args=(i,)) for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert s.n_done() == 160
+        np.testing.assert_array_equal(s.load_result("k7_19")[0], np.full(3, 719))
+    finally:
+        s.close()
+
+
+def test_meta_roundtrip(store):
+    assert store.get_meta("graph") is None
+    store.set_meta("graph", "demo-v1")
+    store.set_meta("graph", "demo-v2")
+    assert store.get_meta("graph") == "demo-v2"

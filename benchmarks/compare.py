@@ -61,7 +61,13 @@ def compare(base: dict[str, dict], new: dict[str, dict],
             continue
         delta = (n_med / b_med - 1.0) * 100.0
         flag = ""
-        if delta > threshold_pct:
+        if b.get("mesh") != n.get("mesh"):
+            # the row was re-measured on a different device mesh — its
+            # median moved because the shape of the run changed, not
+            # because a kernel got slower.  Note it, never count it.
+            flag = (f"  (mesh changed {b.get('mesh')} -> {n.get('mesh')}, "
+                    f"not comparable)")
+        elif delta > threshold_pct:
             flag = f"  <-- REGRESSION (> {threshold_pct:g}%)"
             n_regressed += 1
         elif delta < -threshold_pct:

@@ -48,6 +48,11 @@ Run via ``python -m benchmarks.run --suite serve [--smoke]``.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import subprocess
+import sys
+import tempfile
 
 import jax
 
@@ -209,6 +214,80 @@ def _overhead(direct_tok_s, s) -> float:
     return 0.0
 
 
+def _run_sharded_variant(name: str, extra_cli: list[str], *,
+                         trace_cli: list[str], tmpdir: str) -> dict:
+    """One ``launch/serve.py`` run in a forced-2-device subprocess (the
+    XLA device-count flag must be set before jax initialises, which this
+    already-running process is long past) — returns its ``--stats-json``."""
+    out = os.path.join(tmpdir, f"{name}.json")
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in [os.path.join(repo, "src"),
+                    env.get("PYTHONPATH", "")] if p)
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--smoke", "--trace",
+           "--paged", "--reserve", "demand", "--admit-watermark", "1",
+           "--page-size", "8", "--prefill-chunk", "16",
+           "--stats-json", out] + trace_cli + extra_cli
+    proc = subprocess.run(cmd, env=env, cwd=repo, capture_output=True,
+                          text=True, timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(f"sharded variant {name!r} failed "
+                           f"(rc={proc.returncode}):\n{proc.stderr[-2000:]}")
+    with open(out) as f:
+        return json.load(f)
+
+
+def run_sharded(smoke: bool = False) -> dict:
+    """The multi-device row (DESIGN.md §13): one 2-device comparison of
+
+    * ``base``  — 1 device, no mesh, pool of P pages on batch B;
+    * ``tp2``   — ``--mesh 2,1``: the SAME pool TP-sharded over kv_heads —
+      per-device pool bytes must halve;
+    * ``dp2``   — ``--mesh 1,2``: batch 2B and pool ~2P split into two
+      device groups at EQUAL per-device pool bytes — both groups must do
+      nonzero work (``group_occupancy``).
+
+    Forced host devices share one CPU's FLOPs, so ``speedup_vs_1dev_pct``
+    records scheduling/collective overhead rather than real speedup — the
+    row's value is the invariants (byte halving, group balance) tracked
+    over PRs."""
+    n_req = 12 if smoke else 24
+    base_batch, base_pages = 4, 18          # even page count so DP shards
+    trace = ["--prompt-lens", "8", "16", "--max-new", "8",
+             "--n-requests", str(n_req), "--seed", "0"]
+    with tempfile.TemporaryDirectory() as td:
+        base = _run_sharded_variant(
+            "base", ["--batch", str(base_batch),
+                     "--num-pages", str(base_pages)],
+            trace_cli=trace, tmpdir=td)
+        tp2 = _run_sharded_variant(
+            "tp2", ["--batch", str(base_batch),
+                    "--num-pages", str(base_pages), "--mesh", "2,1"],
+            trace_cli=trace, tmpdir=td)
+        dp2 = _run_sharded_variant(
+            "dp2", ["--batch", str(2 * base_batch),
+                    "--num-pages", str(2 * base_pages), "--mesh", "1,2"],
+            trace_cli=trace, tmpdir=td)
+    base_tok_s = base["tok_per_s"]
+    return _row(
+        "serve_sharded", 2 * base_batch, 8, dp2,
+        mesh=dp2["mesh"], device_groups=dp2["device_groups"],
+        group_occupancy=dp2["group_occupancy"],
+        kv_budget_tokens=dp2["kv_budget_tokens"],
+        per_device_pool_bytes=dp2["per_device_pool_bytes"],
+        base_per_device_pool_bytes=base["per_device_pool_bytes"],
+        tp2_per_device_pool_bytes=tp2["per_device_pool_bytes"],
+        tp2_pool_halved=(2 * tp2["per_device_pool_bytes"]
+                         == base["per_device_pool_bytes"]),
+        base_tok_per_s=base_tok_s,
+        tp2_tok_per_s=tp2["tok_per_s"],
+        speedup_vs_1dev_pct=(dp2["tok_per_s"] / base_tok_s - 1.0) * 100.0
+        if base_tok_s else 0.0)
+
+
 def run(smoke: bool = False) -> list[dict]:
     from repro.configs import get_smoke_config
     from repro.models.transformer import init_params
@@ -324,4 +403,8 @@ def run(smoke: bool = False) -> list[dict]:
         * 100.0 if nc["tok_per_s"] else 0.0,
         chunk_traces=pc["trace_counts"]["chunk_prefill"],
         decode_traces=pc["trace_counts"]["decode"]))
+
+    # -- sharded trace: TP/DP device-mesh serving in forced-2-device
+    # subprocesses (DESIGN.md §13)
+    rows.append(run_sharded(smoke))
     return rows

@@ -239,6 +239,53 @@ class JobStore:
     def n_done(self) -> int:
         return self.counts().get("done", 0)
 
+    def gc(self, *, max_age_s: float | None = None,
+           max_rows: int | None = None,
+           now: float | None = None) -> dict[str, int]:
+        """Prune ``done`` rows (and their spill files) so a long-lived store
+        does not grow without bound: drop rows older than ``max_age_s``,
+        then — of the survivors — keep only the ``max_rows`` most recently
+        updated.  Only ``done`` rows are ever candidates: pending/running/
+        lost rows carry live scheduling state and dropping one would
+        re-execute (or worse, double-claim) in-flight work, so the state
+        filter is structural, not a fast path.  Returns
+        ``{"rows": pruned_rows, "spill_files": unlinked_files}``."""
+        if max_age_s is None and max_rows is None:
+            return {"rows": 0, "spill_files": 0}
+        if max_age_s is not None and max_age_s < 0:
+            raise ValueError(f"max_age_s {max_age_s} must be >= 0")
+        if max_rows is not None and max_rows < 0:
+            raise ValueError(f"max_rows {max_rows} must be >= 0")
+        now = time.time() if now is None else now
+        with self._lock, self._conn:
+            doomed = []
+            if max_age_s is not None:
+                doomed += self._conn.execute(
+                    "SELECT key, spill FROM jobs "
+                    "WHERE state='done' AND updated_at < ?",
+                    (now - max_age_s,)).fetchall()
+            if max_rows is not None:
+                survivors = self._conn.execute(
+                    "SELECT key, spill FROM jobs WHERE state='done' "
+                    + ("AND updated_at >= ? " if max_age_s is not None else "")
+                    + "ORDER BY updated_at DESC",
+                    ((now - max_age_s,) if max_age_s is not None else ()),
+                ).fetchall()
+                doomed += survivors[max_rows:]
+            self._conn.executemany(
+                "DELETE FROM jobs WHERE key=? AND state='done'",
+                [(key,) for key, _ in doomed])
+        spilled = 0
+        for _, spill in doomed:
+            if spill is None:
+                continue
+            try:
+                os.remove(os.path.join(self.spill_dir, spill))
+                spilled += 1
+            except FileNotFoundError:
+                pass
+        return {"rows": len(doomed), "spill_files": spilled}
+
     # -- worker registration / heartbeats ---------------------------------
     def register_worker(self, wid: int, pid: int | None = None) -> None:
         """Registration counts as the first beat — a worker spawned just

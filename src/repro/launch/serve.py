@@ -104,11 +104,19 @@ def warmup_requests(rng: np.random.Generator, cfg, *, prompt_lens,
 
 def make_scheduler(cfg, params, args, *, sp: SamplingParams,
                    max_len: int) -> ServeScheduler:
+    mesh = None
+    device_groups = 1
+    if getattr(args, "mesh", None):
+        from repro.serve.mesh import MeshSpec, build_serve_mesh
+        spec = MeshSpec.parse(args.mesh)
+        mesh = build_serve_mesh(spec)
+        device_groups = spec.dp
     if getattr(args, "paged", False):
         eng = PagedEngine(cfg, params, batch=args.batch, max_len=max_len,
                           page_size=args.page_size,
                           num_pages=args.num_pages,
-                          prefill_chunk=args.prefill_chunk)
+                          prefill_chunk=args.prefill_chunk,
+                          mesh=mesh)
     else:
         eng = Engine(cfg, params, batch=args.batch, max_len=max_len)
     tracker = None
@@ -129,7 +137,9 @@ def make_scheduler(cfg, params, args, *, sp: SamplingParams,
                           preempt_policy=getattr(args, "preempt_policy",
                                                  "fewest"),
                           admit_watermark=getattr(args, "admit_watermark", 0),
-                          prefix_cache=getattr(args, "prefix_cache", False))
+                          prefix_cache=getattr(args, "prefix_cache", False),
+                          prefix_admit=getattr(args, "prefix_admit", 1),
+                          device_groups=device_groups)
 
 
 def prepare_trace(cfg, params, args, *, sp: SamplingParams):
@@ -161,7 +171,7 @@ def prepare_trace(cfg, params, args, *, sp: SamplingParams):
                       if b + 2 <= sched.engine.max_len]
     sched.run(warmup_requests(rng, cfg, prompt_lens=warm_lens))
     sched.reset_metrics()
-    if getattr(sched, "prefix", None) is not None:
+    if getattr(sched, "prefix_cache_active", False):
         # drop the warmup prompts' cache entries (and their held pages):
         # measured replays start from a cold cache and earn their hits from
         # the trace's own shared prefixes
@@ -185,7 +195,8 @@ def replay_trace(sched, reqs) -> tuple:
     snap = (rate, results, wall, sched.occupancy, sched.queue.n_rejected,
             sched.n_preempted, sched.resume_tokens_recomputed,
             sched.n_admit_deferred, sched.n_prefix_lookups,
-            sched.n_prefix_hits, sched.pages_shared, sched.n_cow_copies)
+            sched.n_prefix_hits, sched.pages_shared, sched.n_cow_copies,
+            sched.n_cache_insert_deferred, tuple(sched.group_occupancy))
     sched.reset_metrics()              # also clears occupancy + counters
     return snap
 
@@ -213,7 +224,8 @@ def trace_stats(args, sched, snap) -> dict:
     """Build the stats dict from the best replay snapshot."""
     (_, results, wall, occupancy, n_rejected,
      n_preempted, resume_recomputed, n_deferred,
-     n_lookups, n_hits, pages_shared, cow_copies) = snap
+     n_lookups, n_hits, pages_shared, cow_copies,
+     cache_insert_deferred, group_occupancy) = snap
     n_tok = sum(r.n_generated for r in results)
     # NaN, not 0.0, when nothing completed: a broken/all-shed run must not
     # record perfect-looking latencies into the BENCH trajectory
@@ -251,7 +263,23 @@ def trace_stats(args, sched, snap) -> dict:
         "prefix_hit_rate": (n_hits / n_lookups if n_lookups else 0.0),
         "pages_shared": pages_shared,
         "cow_copies": cow_copies,
+        "cache_insert_deferred": cache_insert_deferred,
+        "mesh": getattr(args, "mesh", None) or None,
+        "device_groups": len(sched.groups),
+        "group_occupancy": [float(x) for x in group_occupancy],
     }
+    if sched.paged:
+        # per-device KV budget: pool tokens scaled by the byte fraction one
+        # device holds — TP=2 halves it over kv_heads; DP=2 halves it over
+        # pages whenever the pool size divides (odd pools stay replicated)
+        total_b = eng.total_pool_bytes()
+        dev_b = eng.per_device_pool_bytes()
+        pool_tokens = eng.num_pages * eng.page_size
+        stats["total_pool_bytes"] = total_b
+        stats["per_device_pool_bytes"] = dev_b
+        stats["kv_budget_tokens"] = (
+            int(round(pool_tokens * dev_b / total_b)) if total_b else
+            pool_tokens)
     return stats
 
 
@@ -355,6 +383,23 @@ def main(argv=None):
     ap.add_argument("--prefix-cache", action="store_true",
                     help="paged: share cache-hit prompt prefixes across "
                          "slots (copy-on-write pages)")
+    ap.add_argument("--prefix-admit", type=int, default=1,
+                    help="prefix cache: insert a prefix only on its Nth "
+                         "sighting (N=1 inserts immediately); first "
+                         "sightings hash host-side without taking pool "
+                         "references")
+    ap.add_argument("--mesh", default=None, metavar="TP,DP",
+                    help="paged: shard the engine over a TPxDP device mesh "
+                         "— KV heads over TP (one model replica), batch "
+                         "slots + page pool over DP device groups "
+                         "(DESIGN.md §13).  '1,1' forces the mesh code "
+                         "path on one device (bit-identical to no mesh)")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="trace mode: replay the trace N times on the "
+                         "warmed scheduler and report the fastest")
+    ap.add_argument("--stats-json", default="",
+                    help="trace mode: dump the stats dict to this path as "
+                         "JSON (the sharded bench reads it back)")
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     help="trace mode: every prompt opens with the same "
                          "token prefix of this length (system-prompt "
@@ -368,6 +413,12 @@ def main(argv=None):
                     help="hypar engine: re-seed suspended requests from "
                          "--store before replaying (requires --reserve "
                          "demand)")
+    ap.add_argument("--store-gc", type=float, default=None, metavar="SECS",
+                    help="after the run, prune done job-store rows older "
+                         "than this many seconds (and their spill files)")
+    ap.add_argument("--store-gc-rows", type=int, default=None, metavar="N",
+                    help="after the run, keep at most N most-recent done "
+                         "job-store rows")
     args = ap.parse_args(argv)
     if (args.store or args.resume) and args.engine != "hypar":
         ap.error("--store/--resume require --engine hypar (the tracker "
@@ -386,6 +437,21 @@ def main(argv=None):
                  "pages to share)")
     if args.shared_prefix_len and not args.trace:
         ap.error("--shared-prefix-len requires --trace")
+    if args.prefix_admit < 1:
+        ap.error("--prefix-admit must be >= 1")
+    if args.mesh:
+        from repro.serve.mesh import MeshSpec
+        try:
+            spec = MeshSpec.parse(args.mesh)
+        except ValueError as e:
+            ap.error(str(e))
+        if spec.size > 1 and not args.paged:
+            ap.error("--mesh with more than one device requires --paged "
+                     "(the sharding rules cover the paged pool)")
+    if (args.store_gc is not None or args.store_gc_rows is not None) \
+            and not args.store:
+        ap.error("--store-gc/--store-gc-rows need --store (nothing to "
+                 "prune otherwise)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     from repro.models.transformer import init_params
@@ -393,12 +459,18 @@ def main(argv=None):
     sp = SamplingParams(temperature=args.temperature)
 
     if args.trace:
-        stats = run_trace(cfg, params, args, sp=sp)
+        stats = run_trace(cfg, params, args, sp=sp, repeats=args.repeats)
         kind = "paged" if stats["paged"] else "dense"
         print(f"engine={stats['engine']} ({kind}) "
               f"requests={stats['n_requests']} "
               f"(+{stats['n_rejected']} shed) tokens={stats['gen_tokens']} "
               f"traces={stats['trace_counts']}")
+        if stats.get("mesh"):
+            occ = ", ".join(f"{x*100:.0f}%" for x in stats["group_occupancy"])
+            print(f"mesh={stats['mesh']} groups={stats['device_groups']} "
+                  f"group_occupancy=[{occ}] per_device_pool="
+                  f"{stats.get('per_device_pool_bytes', 0)}B "
+                  f"kv_budget={stats.get('kv_budget_tokens', 0)} tokens")
         if stats["paged"]:
             print(f"reserve={stats['reserve']} "
                   f"preempts={stats['preempt_count']} "
@@ -415,9 +487,30 @@ def main(argv=None):
               f"lat p50={stats['lat_p50_s']*1e3:.1f}ms "
               f"p95={stats['lat_p95_s']*1e3:.1f}ms "
               f"occupancy={stats['occupancy']*100:.0f}%")
+        if args.stats_json:
+            import json
+            with open(args.stats_json, "w") as f:
+                json.dump(stats, f, indent=1, default=float)
+        _maybe_store_gc(args)
         return stats
     run_waves(cfg, params, args, sp=sp)
+    _maybe_store_gc(args)
     return None
+
+
+def _maybe_store_gc(args) -> None:
+    """Post-run job-store hygiene (``--store-gc`` / ``--store-gc-rows``)."""
+    if args.store_gc is None and getattr(args, "store_gc_rows", None) is None:
+        return
+    from repro.core.store import JobStore
+    store = JobStore(args.store)
+    try:
+        pruned = store.gc(max_age_s=args.store_gc,
+                          max_rows=args.store_gc_rows)
+        print(f"store gc: pruned {pruned['rows']} done row(s), "
+              f"{pruned['spill_files']} spill file(s) from {args.store}")
+    finally:
+        store.close()
 
 
 if __name__ == "__main__":

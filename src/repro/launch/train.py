@@ -99,12 +99,22 @@ def main(argv=None):
                          "the store, not re-executed)")
     ap.add_argument("--proc-workers", type=int, default=2,
                     help="proc engine: number of worker processes")
+    ap.add_argument("--store-gc", type=float, default=None, metavar="SECS",
+                    help="after the run, prune done job-store rows older "
+                         "than this many seconds (and their spill files)")
+    ap.add_argument("--store-gc-rows", type=int, default=None, metavar="N",
+                    help="after the run, keep at most N most-recent done "
+                         "job-store rows")
     args = ap.parse_args(argv)
     if (args.store or args.resume) and args.engine != "proc":
         ap.error("--store/--resume require --engine proc")
     if args.resume and not args.store:
         ap.error("--resume needs --store (a temporary store has no "
                  "previous run to resume from)")
+    if (args.store_gc is not None or args.store_gc_rows is not None) \
+            and not args.store:
+        ap.error("--store-gc/--store-gc-rows need --store (a temporary "
+                 "store is deleted whole when the run ends)")
 
     base = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = base if args.smoke else scale_config(
@@ -234,6 +244,17 @@ def _run_hypar(cfg, spec, stream, args) -> float:
         print(f"job store: {ex.n_executed} executed, "
               f"{ex.n_memoised} memoised"
               + (f" (durable at {args.store})" if args.store else ""))
+    if args.store and (args.store_gc is not None
+                       or args.store_gc_rows is not None):
+        from repro.core.store import JobStore
+        gc_store = JobStore(args.store)
+        try:
+            pruned = gc_store.gc(max_age_s=args.store_gc,
+                                 max_rows=args.store_gc_rows)
+            print(f"store gc: pruned {pruned['rows']} done row(s), "
+                  f"{pruned['spill_files']} spill file(s)")
+        finally:
+            gc_store.close()
     return dt
 
 

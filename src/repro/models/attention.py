@@ -25,6 +25,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.parallel.sharding import logical
+
 from .config import ModelConfig
 from .layers import apply_norm, apply_rope, dense, init_dense, init_norm, rope_freqs
 
@@ -169,10 +171,12 @@ def gather_pages(pool, page_table):
     if pool.ndim == 5:
         g = pool[:, page_table]                  # (G, B, n, KV, ps, D)
         G, B, n, KV, ps, D = g.shape
-        return g.transpose(0, 1, 3, 2, 4, 5).reshape(G, B, KV, n * ps, D)
+        out = g.transpose(0, 1, 3, 2, 4, 5).reshape(G, B, KV, n * ps, D)
+        return logical(out, None, "slots", "kv_heads", None, None)
     g = pool[page_table]                         # (B, n, KV, ps, D)
     B, n, KV, ps, D = g.shape
-    return g.transpose(0, 2, 1, 3, 4).reshape(B, KV, n * ps, D)
+    out = g.transpose(0, 2, 1, 3, 4).reshape(B, KV, n * ps, D)
+    return logical(out, "slots", "kv_heads", None, None)
 
 
 def _chunk_attn_with_cache(q, k_cache, v_cache, start, kt, vt, *,

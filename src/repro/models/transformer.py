@@ -416,8 +416,10 @@ def _write_kv_paged(pool, delta, pos, pages, page_size, *, stacked: bool):
         # (G, B, KV, 1, D) -> (B, G, KV, D); advanced indices (pid, off)
         # are separated by slices, so the batch axis moves to the front
         val = jnp.moveaxis(val[:, :, :, 0, :], 1, 0)
-        return pool.at[:, pid, :, off, :].set(val)
-    return pool.at[pid, :, off, :].set(val[:, :, 0, :])
+        out = pool.at[:, pid, :, off, :].set(val)
+        return logical(out, None, "pages", "kv_heads", None, None)
+    out = pool.at[pid, :, off, :].set(val[:, :, 0, :])
+    return logical(out, "pages", "kv_heads", None, None)
 
 
 def _page_view_block(block_cache, pages):
@@ -678,10 +680,12 @@ def _write_kv_chunk_paged(pool, delta, start, pages_1d, page_size, *,
     if stacked:
         G, _, KV, _, D = delta.shape
         val = delta[:, 0].reshape(G, KV, n, page_size, D).swapaxes(1, 2)
-        return pool.at[:, pids].set(val.astype(pool.dtype))
+        out = pool.at[:, pids].set(val.astype(pool.dtype))
+        return logical(out, None, "pages", "kv_heads", None, None)
     _, KV, _, D = delta.shape
     val = delta[0].reshape(KV, n, page_size, D).swapaxes(0, 1)
-    return pool.at[pids].set(val.astype(pool.dtype))
+    out = pool.at[pids].set(val.astype(pool.dtype))
+    return logical(out, "pages", "kv_heads", None, None)
 
 
 def chunk_prefill_step(cfg: ModelConfig, params: dict, cache: dict, tokens, *,

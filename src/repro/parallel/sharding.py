@@ -16,6 +16,8 @@ Default production mapping (DESIGN.md §5):
   vocab        -> "model"               sharded embedding/unembedding
   embed_fsdp   -> ("pod", "data")       parameter-storage sharding (ZeRO-3)
   ssm_heads    -> "model"               SSD head parallelism
+  slots        -> "data"                serve: batch slots across device groups
+  pages        -> "data"                serve: KV page pool across device groups
 
 A rule resolving to an axis that does not divide the tensor dim is dropped
 (replication) — divisibility-safe by construction.
@@ -109,6 +111,11 @@ DEFAULT_RULES: dict[str, Any] = {
     "ssm_heads": "model",
     "ssm_state": None,
     "layers": None,
+    # serve-side axes (DESIGN.md §13): batch slots and the paged KV pool
+    # partition over the data axis (device groups); kv_heads above covers
+    # tensor-parallel decode of the pool.
+    "slots": "data",
+    "pages": "data",
 }
 
 

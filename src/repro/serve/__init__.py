@@ -1,8 +1,9 @@
 from .engine import (Engine, PagedEngine, SamplingParams, chunk_buckets_for,
                      chunk_plan, count_generated)
 from .prefix import PrefixCache
-from .scheduler import (DEFAULT_BUCKETS, HyParRequestTracker, PageAllocator,
-                        Request, RequestQueue, RequestResult, ServeScheduler,
+from .scheduler import (DEFAULT_BUCKETS, CostModelParams, DeviceGroup,
+                        HyParRequestTracker, PageAllocator, Request,
+                        RequestQueue, RequestResult, ServeScheduler,
                         SlotState)
 
 __all__ = [
@@ -10,5 +11,5 @@ __all__ = [
     "chunk_plan", "chunk_buckets_for",
     "Request", "RequestResult", "RequestQueue", "SlotState",
     "ServeScheduler", "HyParRequestTracker", "PageAllocator", "PrefixCache",
-    "DEFAULT_BUCKETS",
+    "DeviceGroup", "CostModelParams", "DEFAULT_BUCKETS",
 ]

@@ -34,6 +34,7 @@ over every axis).
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 from typing import Sequence
@@ -43,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
+from repro.parallel.sharding import ShardingRules, use_rules
 from repro.models.transformer import (chunk_prefill_step, decode_step,
                                       init_cache, init_paged_cache,
                                       layer_plan)
@@ -341,7 +343,8 @@ class PagedEngine:
 
     def __init__(self, cfg: ModelConfig, params, *, batch: int, max_len: int,
                  page_size: int = 16, num_pages: int | None = None,
-                 prefill_chunk: int = 64, donate_cache: bool = True):
+                 prefill_chunk: int = 64, donate_cache: bool = True,
+                 mesh=None):
         if cfg.family == "encdec":
             raise NotImplementedError("paged serving for encdec models "
                                       "(cross-attention buffers)")
@@ -368,6 +371,17 @@ class PagedEngine:
         # of it to hand a second request
         plan = layer_plan(cfg)
         self.supports_prefix_cache = "ssm" not in plan.pattern + plan.tail
+        # multi-device serving (DESIGN.md §13): with a mesh, the page pools
+        # shard kv_heads->model (TP) and pages/slots->data (DP groups); the
+        # three jitted programs trace inside a use_rules context so the
+        # model code's logical() annotations become real constraints.  A
+        # mesh of total size 1 resolves every rule to replication — the
+        # single-device code path, bit for bit.
+        self.mesh = mesh
+        self._rules = None
+        if mesh is not None:
+            from .mesh import serve_rules
+            self._rules = ShardingRules(mesh=mesh, rules=serve_rules())
 
         def _decode(params, cache, tokens, page_table, update_mask):
             self._trace_counts["decode"] += 1
@@ -418,14 +432,44 @@ class PagedEngine:
         (chunk_prefill|decode)."""
         return self._trace_counts[name]
 
+    def _rules_ctx(self):
+        """Ambient sharding rules for tracing the jitted programs — a
+        nullcontext without a mesh, so the single-device path is untouched."""
+        if self._rules is None:
+            return contextlib.nullcontext()
+        return use_rules(self.mesh, self._rules.rules)
+
     # -- lifecycle -------------------------------------------------------------
     def ensure_batch(self, *, enc_len: int | None = None) -> None:
         """Initialise an empty live batch (all slots free, zero lengths,
         every table row on the trash page)."""
         if self.cache is None:
-            self.cache = init_paged_cache(self.cfg, self.batch,
-                                          num_pages=self.num_pages,
-                                          page_size=self.page_size)
+            cache = init_paged_cache(self.cfg, self.batch,
+                                     num_pages=self.num_pages,
+                                     page_size=self.page_size)
+            if self._rules is not None:
+                from .mesh import shard_paged_cache
+                cache = shard_paged_cache(cache, self._rules)
+            self.cache = cache
+
+    def per_device_pool_bytes(self) -> int:
+        """Max attention-pool bytes resident on any one device (equals the
+        total pool bytes on a single device; a TP=2 mesh halves it when
+        kv_heads divides)."""
+        self.ensure_batch()
+        from .mesh import per_device_pool_bytes
+        return per_device_pool_bytes(self.cache)
+
+    def total_pool_bytes(self) -> int:
+        """Attention page-pool bytes across the whole mesh (0 for pure-SSM
+        models — their dense per-slot state is not paged)."""
+        self.ensure_batch()
+        total = 0
+        for part in ("groups", "tail"):
+            for bc in self.cache[part]:
+                if isinstance(bc, dict) and "self" in bc:
+                    total += sum(int(a.nbytes) for a in bc["self"].values())
+        return total
 
     def pages_needed(self, true_len: int, max_new: int) -> int:
         """Pages a request needs to hold ``true_len`` prompt tokens plus
@@ -456,8 +500,10 @@ class PagedEngine:
         ids = self._check_page_row(slot, page_ids)
         row = np.zeros((1, self.max_pages), np.int32)
         row[0, :len(ids)] = ids
-        logits, self.cache = self._chunk(self.params, self.cache, tokens_1xC,
-                                         row, slot, start, valid_in_chunk)
+        with self._rules_ctx():
+            logits, self.cache = self._chunk(self.params, self.cache,
+                                             tokens_1xC, row, slot, start,
+                                             valid_in_chunk)
         return logits
 
     def _check_page_row(self, slot: int, page_ids) -> list[int]:
@@ -522,7 +568,8 @@ class PagedEngine:
         if src == dst:
             raise ValueError(f"copy_page onto itself (page {src})")
         self.ensure_batch()
-        self.cache = self._copy(self.cache, np.int32(src), np.int32(dst))
+        with self._rules_ctx():
+            self.cache = self._copy(self.cache, np.int32(src), np.int32(dst))
 
     def remap_slot_page(self, slot: int, idx: int, page_id: int) -> None:
         """Replace ONE live table-row entry (COW remap: shared original ->
@@ -582,12 +629,20 @@ class PagedEngine:
         table parks them on the trash page).  Defaults to all-live."""
         self.ensure_batch()
         if self._pt_device is None:
-            self._pt_device = jnp.asarray(self.page_table)
+            if self._rules is not None:
+                from jax.sharding import NamedSharding
+                spec = self._rules.spec_for(["slots", None],
+                                            self.page_table.shape)
+                self._pt_device = jax.device_put(
+                    self.page_table, NamedSharding(self.mesh, spec))
+            else:
+                self._pt_device = jnp.asarray(self.page_table)
         if live_mask is None:
             live_mask = np.ones((self.batch,), bool)
-        logits, self.cache = self._decode(self.params, self.cache, tokens,
-                                          self._pt_device,
-                                          np.asarray(live_mask, bool))
+        with self._rules_ctx():
+            logits, self.cache = self._decode(self.params, self.cache, tokens,
+                                              self._pt_device,
+                                              np.asarray(live_mask, bool))
         return logits
 
     _sample = Engine._sample

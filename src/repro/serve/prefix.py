@@ -52,14 +52,19 @@ class _Entry:
 class PrefixCache:
     """Hash-chained map from page-aligned prompt prefixes to pool pages."""
 
-    def __init__(self, page_size: int):
+    def __init__(self, page_size: int, *, admit_after: int = 1):
         if page_size <= 0:
             raise ValueError(f"page_size {page_size} must be positive")
+        if admit_after < 1:
+            raise ValueError(f"admit_after {admit_after} must be >= 1")
         self.page_size = page_size
+        self.admit_after = admit_after
         self._entries: dict[bytes, _Entry] = {}
+        self._seen: dict[bytes, int] = {}   # host-side sight counts, no refs
         self._tick = 0
         self.n_inserted = 0
         self.n_evicted = 0
+        self.n_insert_deferred = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -97,10 +102,19 @@ class PrefixCache:
         ``page_ids``; each NEW entry takes one allocator reference (the
         cache's own hold).  An existing key keeps its original page — a
         racing duplicate prefill does not steal the chain (both pages hold
-        identical K/V; the earlier one already serves hits).  Returns the
-        number of entries added."""
+        identical K/V; the earlier one already serves hits).
+
+        With ``admit_after=k`` a new key is only admitted on its k-th
+        sighting; earlier sightings just bump a host-side count (no
+        allocator references taken, ``n_insert_deferred`` incremented).
+        Once one key in a walk is deferred, every deeper key is deferred
+        too — an entry must never exist without its parent, or lookup
+        could hand out an unreachable chain after the parent is admitted
+        later with a DIFFERENT page.  Returns the number of entries
+        added."""
         self._tick += 1
         added = 0
+        chain_broken = False
         for i, key in enumerate(self._keys(tokens)):
             if i >= len(page_ids):
                 break
@@ -108,6 +122,13 @@ class PrefixCache:
             if e is not None:
                 e.last_use = self._tick
                 continue
+            n_seen = self._seen.get(key, 0) + 1
+            if chain_broken or n_seen < self.admit_after:
+                self._seen[key] = n_seen
+                self.n_insert_deferred += 1
+                chain_broken = True
+                continue
+            self._seen.pop(key, None)
             allocator.share([page_ids[i]])
             self._entries[key] = _Entry(page=int(page_ids[i]), depth=i + 1,
                                         last_use=self._tick)
@@ -145,4 +166,5 @@ class PrefixCache:
         for e in self._entries.values():
             allocator.free([e.page])
         self._entries.clear()
+        self._seen.clear()
         return n

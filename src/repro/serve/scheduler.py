@@ -50,7 +50,8 @@ from .prefix import PrefixCache
 
 __all__ = [
     "Request", "RequestResult", "RequestQueue", "SlotState", "PageAllocator",
-    "PrefixCache", "ServeScheduler", "HyParRequestTracker", "DEFAULT_BUCKETS",
+    "PrefixCache", "DeviceGroup", "CostModelParams", "ServeScheduler",
+    "HyParRequestTracker", "DEFAULT_BUCKETS",
 ]
 
 # prompt-length buckets: prompts are right-padded to the next bucket so the
@@ -314,6 +315,48 @@ class PageAllocator:
                 self._free.append(p)
 
 
+@dataclasses.dataclass
+class DeviceGroup:
+    """One data-parallel partition of the serving engine (DESIGN.md §13).
+
+    A group owns a contiguous range of batch slots and a private, contiguous
+    range of the page pool behind its own :class:`PageAllocator` (and its
+    own :class:`PrefixCache`) — allocation, sharing, COW and preemption
+    never cross a group boundary, so every per-group invariant is exactly
+    the single-allocator invariant of before.  The allocator's
+    ``[n_reserved, num_pages)`` free range doubles as the group's page
+    range; the engine-global trash page 0 is shared by all groups (it is
+    never allocator-owned, so it cannot carry a cross-group reference).
+
+    ``ewma_step_s`` is the group's decode-time EWMA — the queue-depth term
+    of the admission router's cost score (the paper's dynamic placement at
+    device-group granularity).
+    """
+
+    gid: int
+    slot_ids: tuple[int, ...]
+    allocator: PageAllocator | None
+    prefix: PrefixCache | None = None
+    ewma_step_s: float = 0.0
+    occupied_slot_steps: int = 0
+
+    @property
+    def page_lo(self) -> int:
+        return self.allocator.n_reserved
+
+    @property
+    def page_hi(self) -> int:
+        return self.allocator.num_pages
+
+    def observe(self, per_slot_step_s: float, alpha: float = 0.3) -> None:
+        """Fold one decode step's per-live-slot time into the EWMA."""
+        if self.ewma_step_s == 0.0:
+            self.ewma_step_s = per_slot_step_s
+        else:
+            self.ewma_step_s = ((1 - alpha) * self.ewma_step_s
+                                + alpha * per_slot_step_s)
+
+
 # ---------------------------------------------------------------------------
 # HyPar integration
 # ---------------------------------------------------------------------------
@@ -382,7 +425,9 @@ class HyParRequestTracker:
         return self.place_batch([req], free_slots)[req.rid]
 
     def place_batch(self, reqs: Sequence[Request],
-                    free_slots: Sequence[int]) -> dict[int, int]:
+                    free_slots: Sequence[int], *,
+                    slot_choices: dict[int, Sequence[int]] | None = None,
+                    ) -> dict[int, int]:
         """Place a whole admission wave with ONE ``plan_segment`` call.
 
         The per-request placement of PR 3 paid the full master-scheduler
@@ -393,6 +438,14 @@ class HyParRequestTracker:
         planned as one segment batch (``plan_segment`` was always batched —
         the serving path just never used it that way).  Returns
         ``{rid: slot}``.
+
+        ``slot_choices`` (``{rid: allowed slots}``) restricts each request
+        to a subset of ``free_slots`` — under device groups the admission
+        router already charged a specific group's allocator for the
+        request's pages, so the slot MUST come from that group (a foreign
+        slot would read pages its group's device shard does not hold).  The
+        master's pick is kept when it lands inside the subset, else the
+        fallback stays within it.
         """
         if len(reqs) > len(free_slots):
             raise ValueError(f"wave of {len(reqs)} requests exceeds "
@@ -414,14 +467,20 @@ class HyParRequestTracker:
         assign: dict[int, int] = {}
         remaining = set(free_slots)
         for req, placement in zip(reqs, placements):
+            allowed = remaining
+            if slot_choices is not None and req.rid in slot_choices:
+                allowed = set(slot_choices[req.rid]) & remaining
+                if not allowed:
+                    raise ValueError(f"request {req.rid}: no free slot left "
+                                     f"in its device group")
             slot = self.wid_to_slot.get(placement.worker.wid)
-            if slot not in remaining:
-                # master picked a busy/taken/unmapped worker: fall back to
-                # the first remaining free slot and keep ITS worker binding —
-                # rebinding the picked worker here would leave two slots
-                # mapped to one wid and a later fail() would invalidate the
-                # busy slot's results
-                slot = sorted(remaining)[0]
+            if slot not in allowed:
+                # master picked a busy/taken/unmapped/foreign-group worker:
+                # fall back to the first remaining allowed slot and keep ITS
+                # worker binding — rebinding the picked worker here would
+                # leave two slots mapped to one wid and a later fail() would
+                # invalidate the busy slot's results
+                slot = sorted(allowed)[0]
             remaining.discard(slot)
             assign[req.rid] = slot
             self._job_of[req.rid] = placement.job
@@ -570,7 +629,10 @@ class ServeScheduler:
                  admit_watermark: int = 0,
                  resume_floor: int | None = None,
                  pool_pages: int | None = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 prefix_admit: int = 1,
+                 device_groups: int = 1,
+                 cost_params: CostModelParams | None = None):
         if reserve not in ("lifetime", "demand"):
             raise ValueError(f"unknown reserve discipline {reserve!r}")
         if preempt_policy not in ("fewest", "lifo"):
@@ -608,16 +670,6 @@ class ServeScheduler:
         # resume has at least paid for the page it appends.
         self.resume_floor = (resume_floor if resume_floor is not None
                              else (engine.page_size if self.paged else 0))
-        # admission currency under paging: free pages, not free slots — the
-        # allocator owns every pool page except the engine's trash page.
-        # ``pool_pages`` restricts the allocator below the engine's physical
-        # pool (same compiled programs, smaller working set) — the
-        # oversubscription knob the soak tests sweep.
-        self.allocator = None
-        if self.paged:
-            usable = (engine.num_pages if pool_pages is None
-                      else min(pool_pages, engine.num_pages))
-            self.allocator = PageAllocator(usable, watermark=admit_watermark)
         # prefix caching (DESIGN.md §11): admission maps a cache-hit prompt
         # prefix onto SHARED pool pages and prefills only the remainder;
         # writes into a shared page copy-on-write first.  Requires paged
@@ -628,9 +680,53 @@ class ServeScheduler:
         if prefix_cache and not self.paged:
             raise ValueError("prefix_cache requires a PagedEngine — dense "
                              "per-slot caches have no pages to share")
-        self.prefix = (PrefixCache(engine.page_size)
-                       if prefix_cache and engine.supports_prefix_cache
-                       else None)
+        # device groups (DESIGN.md §13): slots and the usable page range
+        # partition into contiguous, as-even-as-possible runs; each group
+        # gets a PRIVATE PageAllocator over its run (num_pages/n_reserved
+        # double as the range bounds, so every per-group conservation and
+        # refcount invariant is the single-allocator one) and, when enabled,
+        # its own prefix cache (pages never shared across groups).
+        # ``pool_pages`` still restricts the TOTAL usable pool below the
+        # engine's physical one — the oversubscription knob the soak sweeps.
+        if device_groups < 1:
+            raise ValueError(f"device_groups {device_groups} must be >= 1")
+        if device_groups > 1 and not self.paged:
+            raise ValueError("device_groups > 1 requires a PagedEngine — "
+                             "group ownership partitions the page pool")
+        if device_groups > engine.batch:
+            raise ValueError(f"device_groups {device_groups} exceeds the "
+                             f"{engine.batch} batch slots (every group needs "
+                             f"at least one)")
+        self.admit_watermark = admit_watermark
+        self.groups: list[DeviceGroup] = []
+        if self.paged:
+            usable = (engine.num_pages if pool_pages is None
+                      else min(pool_pages, engine.num_pages))
+            slot_parts = np.array_split(np.arange(engine.batch),
+                                        device_groups)
+            page_parts = np.array_split(np.arange(1, usable), device_groups)
+            for gid in range(device_groups):
+                pages_g = page_parts[gid]
+                if len(pages_g) == 0:
+                    raise ValueError(f"pool of {usable} usable pages cannot "
+                                     f"cover {device_groups} device groups "
+                                     f"(group {gid} would own none)")
+                alloc = PageAllocator(int(pages_g[-1]) + 1,
+                                      n_reserved=int(pages_g[0]),
+                                      watermark=admit_watermark)
+                pref = (PrefixCache(engine.page_size,
+                                    admit_after=prefix_admit)
+                        if prefix_cache and engine.supports_prefix_cache
+                        else None)
+                self.groups.append(DeviceGroup(
+                    gid=gid,
+                    slot_ids=tuple(int(s) for s in slot_parts[gid]),
+                    allocator=alloc, prefix=pref))
+        else:
+            self.groups.append(DeviceGroup(
+                gid=0, slot_ids=tuple(range(engine.batch)), allocator=None))
+        self._slot_group = {s: g for g in self.groups for s in g.slot_ids}
+        self.cost_params = cost_params or CostModelParams()
         self.tracker = tracker
         self.clock = clock
         self._key = key if key is not None else jax.random.PRNGKey(0)
@@ -651,10 +747,30 @@ class ServeScheduler:
         self.n_prefix_hits = 0
         self.pages_shared = 0
         self.n_cow_copies = 0
+        self.n_cache_insert_deferred = 0
+
+    @property
+    def allocator(self) -> PageAllocator | None:
+        """Single-group compatibility accessor (the pre-§13 attribute).
+        With multiple device groups there is no one allocator — use
+        ``self.groups[g].allocator``; this raises instead of silently
+        returning group 0's."""
+        if len(self.groups) == 1:
+            return self.groups[0].allocator
+        raise RuntimeError(f"{len(self.groups)} device groups — no single "
+                           f"allocator; use sched.groups[g].allocator")
+
+    @property
+    def prefix(self) -> PrefixCache | None:
+        """Single-group compatibility accessor; see :attr:`allocator`."""
+        if len(self.groups) == 1:
+            return self.groups[0].prefix
+        raise RuntimeError(f"{len(self.groups)} device groups — no single "
+                           f"prefix cache; use sched.groups[g].prefix")
 
     @property
     def prefix_cache_active(self) -> bool:
-        return self.prefix is not None
+        return any(g.prefix is not None for g in self.groups)
 
     def restore_suspended(self) -> int:
         """Re-seed the suspended-request table from the tracker's durable
@@ -717,10 +833,13 @@ class ServeScheduler:
                 # preempted request could be deferred forever
                 need = max(need, self.engine.pages_needed(
                     len(req.tokens) + max(cap - 1, 0), 1))
-                pool_need = need + self.allocator.watermark
+                pool_need = need + self.admit_watermark
+            # a request lives entirely inside ONE device group's page range,
+            # so the never-fits test is against the LARGEST group's capacity
+            group_cap = max(g.allocator.num_pages - g.allocator.n_reserved
+                            for g in self.groups)
             return (need <= self.engine.max_pages
-                    and pool_need <= self.allocator.num_pages
-                    - self.allocator.n_reserved)
+                    and pool_need <= group_cap)
         return (self._bucket_len(len(req.tokens)) is not None
                 and len(req.tokens) + cap <= self.engine.max_len)
 
@@ -775,9 +894,10 @@ class ServeScheduler:
                 [req.tokens, np.asarray(sus.tokens[:-1], np.int32)])
         return req.tokens
 
-    def _shared_prefix(self, stream) -> list[int]:
-        """Cache-hit pages usable for this prefill stream, floored to a
-        CHUNK boundary strictly below the stream end.
+    def _shared_prefix(self, g: DeviceGroup, stream) -> list[int]:
+        """Cache-hit pages of GROUP ``g``'s prefix cache usable for this
+        prefill stream, floored to a CHUNK boundary strictly below the
+        stream end.
 
         The floor is the bit-exactness contract: K/V values are
         per-position pure functions of the tokens (identical however the
@@ -791,9 +911,9 @@ class ServeScheduler:
         decode writes land past the stream end), so COW triggers are
         defensive enforcement of writable-iff-refcount==1, not a steady-
         state cost."""
-        if self.prefix is None:
+        if g.prefix is None:
             return []
-        chain = self.prefix.lookup(stream)
+        chain = g.prefix.lookup(stream)
         if not chain:
             return []
         ps, C = self.engine.page_size, self.engine.chunk_len
@@ -825,7 +945,7 @@ class ServeScheduler:
         start = len(shared) * self.engine.page_size
         if sus:
             self.resume_tokens_recomputed += len(stream) - start
-        if self.prefix is not None:
+        if self._slot_group[slot].prefix is not None:
             self.n_prefix_lookups += 1
             if shared:
                 self.n_prefix_hits += 1
@@ -845,6 +965,7 @@ class ServeScheduler:
         start, bucket, valid = st.pending_chunks.pop(0)
         toks = st.prefill_tokens
         ps = self.engine.page_size
+        g = self._slot_group[st.slot]
         # writable-iff-refcount==1 enforcement: a chunk write spanning a
         # SHARED page (divergent prefill) must copy-on-write first.  With
         # chunk-floored sharing the plan starts past every shared page, so
@@ -853,7 +974,7 @@ class ServeScheduler:
         first = start // ps
         last = min(-(-(start + bucket) // ps), len(st.page_ids))
         for pidx in range(first, last):
-            if not self.allocator.writable(st.page_ids[pidx]):
+            if not g.allocator.writable(st.page_ids[pidx]):
                 if not self._cow_page(st, pidx):
                     raise RuntimeError(
                         f"pool exhausted during copy-on-write of prefill "
@@ -864,10 +985,13 @@ class ServeScheduler:
                                            valid)
         if not st.pending_chunks:
             self.engine.commit_slot(st.slot, st.page_ids)
-            if self.prefix is not None:
+            if g.prefix is not None:
                 # cache every full page of the stream — read-only from here
                 # on (decode writes land past the stream end)
-                self.prefix.insert(toks, st.page_ids, self.allocator)
+                before = g.prefix.n_insert_deferred
+                g.prefix.insert(toks, st.page_ids, g.allocator)
+                self.n_cache_insert_deferred += (g.prefix.n_insert_deferred
+                                                 - before)
             if st.resume is not None:
                 self._finish_resume(st)
             else:
@@ -901,84 +1025,135 @@ class ServeScheduler:
                                             req.declared_new)
         return self.engine.pages_needed(len(stream), 1)
 
-    def _admit_pages(self, n: int) -> list[int] | None:
-        """Admission allocation with prefix-cache fallback: when the free
-        list cannot cover it, evict cache-only entries (deepest-first) and
-        retry once."""
-        pages = self.allocator.admit(n)
-        if pages is None and self.prefix is not None:
-            if self.prefix.evict_for(self.allocator,
-                                     n + self.allocator.watermark):
-                pages = self.allocator.admit(n)
+    def _admit_pages(self, g: DeviceGroup, n: int) -> list[int] | None:
+        """Admission allocation from GROUP ``g`` with prefix-cache fallback:
+        when the free list cannot cover it, evict cache-only entries
+        (deepest-first) and retry once."""
+        pages = g.allocator.admit(n)
+        if pages is None and g.prefix is not None:
+            if g.prefix.evict_for(g.allocator, n + g.allocator.watermark):
+                pages = g.allocator.admit(n)
         return pages
 
-    def _alloc_pages(self, n: int) -> list[int] | None:
-        """Decode-append / COW allocation (may dip below the watermark),
-        with the same cache-eviction fallback."""
-        pages = self.allocator.alloc(n)
-        if pages is None and self.prefix is not None:
-            if self.prefix.evict_for(self.allocator, n):
-                pages = self.allocator.alloc(n)
+    def _alloc_pages(self, g: DeviceGroup, n: int) -> list[int] | None:
+        """Decode-append / COW allocation from GROUP ``g`` (may dip below
+        the watermark), with the same cache-eviction fallback."""
+        pages = g.allocator.alloc(n)
+        if pages is None and g.prefix is not None:
+            if g.prefix.evict_for(g.allocator, n):
+                pages = g.allocator.alloc(n)
         return pages
+
+    def _route_order(self, groups: Sequence[DeviceGroup],
+                     need: int) -> list[DeviceGroup]:
+        """Cost-model admission routing across device groups (the paper's
+        dynamic job placement at device-group granularity): groups whose
+        free pages cover the request outright come first, then by
+        queue-depth × decode-EWMA cost (busy slots × per-slot step time,
+        seeded with the cost model's dispatch overhead until the EWMA
+        warms), free pages breaking ties.  Gid last keeps the order
+        deterministic."""
+        def score(g: DeviceGroup):
+            busy = sum(1 for s in g.slot_ids
+                       if self.slots[s].request is not None)
+            step_s = g.ewma_step_s or self.cost_params.dispatch_s
+            n_free = g.allocator.n_free if g.allocator is not None else 0
+            return (0 if n_free >= need else 1, busy * step_s, -n_free, g.gid)
+        return sorted(groups, key=score)
 
     def _fill_free_slots(self) -> None:
         """Admit a wave: pull queued requests while slots (dense) or slots +
         pages (paged) allow, place the WHOLE wave through the tracker in one
         ``plan_segment`` call, then insert (dense) or begin chunked prefill
-        (paged).  Paged admission is FIFO: when the pool cannot cover the
-        head request's reservation, filling stops until retirements free
-        pages (no smaller request overtakes — no starvation of long
+        (paged).  Paged admission is FIFO: when no group's pool can cover
+        the head request's reservation, filling stops until retirements
+        free pages (no smaller request overtakes — no starvation of long
         prompts).  Under reserve-on-demand an exhausted pool may instead
         preempt one running victim for the head request — never more than
         one, and only when the victim's pages actually cover the shortfall
-        (anti-thrash guard)."""
-        free = [s.slot for s in self.slots if s.free]
-        wave: list[tuple[Request, list[int] | None,
-                         list[int], np.ndarray | None]] = []
-        while len(wave) < len(free) and len(self.queue):
+        (anti-thrash guard).
+
+        With multiple device groups, each head request is routed to a group
+        by :meth:`_route_order` (free pages + queue-depth EWMA — the cost
+        model's placement at device-group granularity); its shared-prefix
+        hit, page allocation and eventual slot all come from THAT group, so
+        page ownership never crosses a group boundary."""
+        free_by_gid = {g.gid: [s for s in g.slot_ids if self.slots[s].free]
+                       for g in self.groups}
+        all_free = [s for ss in free_by_gid.values() for s in ss]
+        # wave entries: (req, group, reserved slot, pages, shared, stream)
+        wave: list[tuple] = []
+        while any(free_by_gid.values()) and len(self.queue):
             req = self.queue.pop()
             if not self._fits(req):      # raw queue.submit bypassed admission
                 self.queue.n_rejected += 1
                 continue
-            pages, shared, stream = None, [], None
-            if self.paged:
-                stream = self._prefill_stream(req)
-                shared = self._shared_prefix(stream)
+            if not self.paged:
+                g = self.groups[0]
+                wave.append((req, g, free_by_gid[g.gid].pop(0),
+                             None, [], None))
+                continue
+            stream = self._prefill_stream(req)
+            need_total = self._admission_pages(req, stream)
+            cands = self._route_order(
+                [g for g in self.groups if free_by_gid[g.gid]], need_total)
+            placed = False
+            for g in cands:
+                shared = self._shared_prefix(g, stream)
                 if shared:
                     # the slot's references on its hit pages — taken BEFORE
                     # the private allocation, so eviction inside it cannot
                     # reclaim them out from under the admission
-                    self.allocator.share(shared)
-                need = self._admission_pages(req, stream) - len(shared)
-                pages = self._admit_pages(need)
-                if (pages is None and self.demand
-                        and req.rid in self._suspended):
-                    # only a RESUME may preempt to admit: it already earned
-                    # its place once and sits at the queue front, so letting
-                    # it displace a lesser-progressed runner prevents
-                    # starvation — whereas fresh arrivals preempting grown
-                    # runners is the recompute-thrash spiral (they wait for
-                    # retirements instead, like any FIFO admission)
-                    victim = self._choose_victim(
-                        shortfall=need + self.allocator.watermark
-                        - self.allocator.n_free)
-                    if victim is not None:
-                        self._preempt(victim)
-                        pages = self._admit_pages(need)
-                if pages is None:        # pool exhausted: wait, don't shed
-                    if shared:           # release the hit refs taken above
-                        self.allocator.free(shared)
-                    self.n_admit_deferred += 1
-                    self.queue.push_front(req)
+                    g.allocator.share(shared)
+                pages = self._admit_pages(g, need_total - len(shared))
+                if pages is not None:
+                    wave.append((req, g, free_by_gid[g.gid].pop(0),
+                                 pages, shared, stream))
+                    placed = True
                     break
-            wave.append((req, pages, shared, stream))
+                if shared:               # release the hit refs taken above
+                    g.allocator.free(shared)
+            if not placed and self.demand and req.rid in self._suspended:
+                # only a RESUME may preempt to admit: it already earned
+                # its place once and sits at the queue front, so letting
+                # it displace a lesser-progressed runner prevents
+                # starvation — whereas fresh arrivals preempting grown
+                # runners is the recompute-thrash spiral (they wait for
+                # retirements instead, like any FIFO admission).  One
+                # victim, in the best-scored group only (anti-thrash).
+                g = cands[0]
+                shared = self._shared_prefix(g, stream)
+                if shared:
+                    g.allocator.share(shared)
+                need = need_total - len(shared)
+                victim = self._choose_victim(
+                    g, shortfall=need + self.admit_watermark
+                    - g.allocator.n_free)
+                if victim is not None:
+                    self._preempt(victim)
+                    pages = self._admit_pages(g, need)
+                    if pages is not None:
+                        wave.append((req, g, free_by_gid[g.gid].pop(0),
+                                     pages, shared, stream))
+                        placed = True
+                if not placed and shared:
+                    g.allocator.free(shared)
+            if not placed:               # every pool exhausted: wait
+                self.n_admit_deferred += 1
+                self.queue.push_front(req)
+                break
         if not wave:
             return
         if self.tracker is not None:
-            assign = self.tracker.place_batch([w[0] for w in wave], free)
+            # each request must land in the group whose allocator its pages
+            # came from — restrict the master's choice to that group's slots
+            choices = ({req.rid: g.slot_ids for req, g, *_ in wave}
+                       if len(self.groups) > 1 else None)
+            assign = self.tracker.place_batch([w[0] for w in wave], all_free,
+                                              slot_choices=choices)
         else:
-            assign = {w[0].rid: slot for w, slot in zip(wave, free)}
-        for req, pages, shared, stream in wave:
+            assign = {w[0].rid: w[2] for w in wave}
+        for req, g, slot0, pages, shared, stream in wave:
             slot = assign[req.rid]
             if self.paged:
                 self._start_prefill(req, slot, pages, shared, stream)
@@ -992,8 +1167,11 @@ class ServeScheduler:
         return (st.resume_base == 0
                 or len(st.tokens) - st.resume_base >= self.resume_floor)
 
-    def _choose_victim(self, *, shortfall: int = 1) -> SlotState | None:
-        """Pick the lowest-priority running slot to preempt, or None.
+    def _choose_victim(self, g: DeviceGroup, *,
+                       shortfall: int = 1) -> SlotState | None:
+        """Pick the lowest-priority running slot of GROUP ``g`` to preempt,
+        or None — a victim's pages only help an allocation from the same
+        group's pool.
 
         Candidates are live decoding slots (mid-prefill slots hold work
         nothing has been sampled from yet).  Policy ``fewest``: fewest
@@ -1006,7 +1184,7 @@ class ServeScheduler:
         caller that cannot proceed without a page self-preempts
         (``_ensure_decode_pages``) — the one case that overrides the
         floor, since the alternative is a write into an unowned page."""
-        cands = [s for s in self.slots
+        cands = [s for s in (self.slots[i] for i in g.slot_ids)
                  if s.request is not None and not s.prefilling
                  and not s.finished and self._floor_ok(s)
                  and self._n_exclusive(s) >= shortfall]
@@ -1023,7 +1201,8 @@ class ServeScheduler:
         holds it — so counting raw ``page_ids`` would overstate a victim's
         yield and re-introduce the preempt-and-still-fail thrash the
         shortfall guard exists to prevent."""
-        return sum(1 for p in st.page_ids if self.allocator.writable(p))
+        alloc = self._slot_group[st.slot].allocator
+        return sum(1 for p in st.page_ids if alloc.writable(p))
 
     def _suspend(self, st: SlotState) -> None:
         """Record the slot's generated tokens as the resume state of its
@@ -1068,21 +1247,22 @@ class ServeScheduler:
         # order avoids append-then-get-preempted churn within one step
         order = sorted(live, key=lambda s: (-len(s.tokens), s.admit_seq))
         for st in order:
+            g = self._slot_group[st.slot]
             while st.request is not None:
                 widx = st.pos - 1        # next KV write position
                 if widx >= len(st.page_ids) * ps:
-                    pg = self._alloc_pages(1)
+                    pg = self._alloc_pages(g, 1)
                     if pg is not None:
                         st.page_ids.append(pg[0])
                         self.engine.append_page(st.slot, pg[0])
                         continue
-                elif self.allocator.writable(st.page_ids[widx // ps]):
+                elif g.allocator.writable(st.page_ids[widx // ps]):
                     break
                 elif self._cow_page(st, widx // ps):
                     # decode write would land in a SHARED page: copied and
                     # remapped, the slot now writes its private page
                     break
-                victim = self._choose_victim()
+                victim = self._choose_victim(g)
                 if victim is None:
                     victim = st          # floor protects only from OTHERS
                 self._preempt(victim)
@@ -1096,7 +1276,8 @@ class ServeScheduler:
         other holders keep reading it untouched).  Returns False when the
         pool cannot supply the copy target — the caller preempts and
         retries."""
-        pg = self._alloc_pages(1)
+        g = self._slot_group[st.slot]
+        pg = self._alloc_pages(g, 1)
         if pg is None:
             return False
         src, dst = st.page_ids[pidx], pg[0]
@@ -1106,15 +1287,15 @@ class ServeScheduler:
             # mid-prefill slots' live rows park on the trash page; their
             # real row is installed wholesale by commit_slot
             self.engine.remap_slot_page(st.slot, pidx, dst)
-        self.allocator.free([src])
+        g.allocator.free([src])
         self.n_cow_copies += 1
         return True
 
     def _release_slot(self, st: SlotState) -> None:
-        """Hand the slot's pages back to the pool and point its page-table
-        row at the trash page (paged engines only)."""
+        """Hand the slot's pages back to its group's pool and point its
+        page-table row at the trash page (paged engines only)."""
         if self.paged and st.page_ids:
-            self.allocator.free(st.page_ids)
+            self._slot_group[st.slot].allocator.free(st.page_ids)
             self.engine.free_slot(st.slot)
             st.page_ids = []
 
@@ -1210,6 +1391,13 @@ class ServeScheduler:
         self.occupied_slot_steps += len(live) + len(prefilling)
         if self.tracker is not None:
             self.tracker.observe(now - t0, len(live))
+        busy = {s.slot for s in live} | {s.slot for s in prefilling}
+        for g in self.groups:
+            n_busy = sum(1 for s in g.slot_ids if s in busy)
+            g.occupied_slot_steps += n_busy
+            g_live = sum(1 for s in live if s.slot in g.slot_ids)
+            if g_live:
+                g.observe((now - t0) / g_live)
         for st in live:
             tok = int(ids[st.slot])
             st.tokens.append(tok)
@@ -1275,16 +1463,19 @@ class ServeScheduler:
         self.n_prefix_hits = 0
         self.pages_shared = 0
         self.n_cow_copies = 0
+        self.n_cache_insert_deferred = 0
+        for g in self.groups:
+            g.occupied_slot_steps = 0     # EWMA step time survives — it is
+            #                               calibration, not a run metric
 
     def flush_prefix_cache(self) -> int:
-        """Drop every prefix-cache entry, releasing the cache's page
-        references (pages shared with live slots stay outstanding under
-        the slots' refs).  Returns the number of entries dropped — used
-        after warmup so a measured run starts from a cold cache, and at
-        drain checks to prove zero leaked references."""
-        if self.prefix is None:
-            return 0
-        return self.prefix.flush(self.allocator)
+        """Drop every prefix-cache entry in every group, releasing the
+        caches' page references (pages shared with live slots stay
+        outstanding under the slots' refs).  Returns the number of entries
+        dropped — used after warmup so a measured run starts from a cold
+        cache, and at drain checks to prove zero leaked references."""
+        return sum(g.prefix.flush(g.allocator) for g in self.groups
+                   if g.prefix is not None)
 
     # -- metrics ---------------------------------------------------------------
     @property
@@ -1293,3 +1484,12 @@ class ServeScheduler:
         if self.n_steps == 0:
             return 0.0
         return self.occupied_slot_steps / (self.n_steps * self.engine.batch)
+
+    @property
+    def group_occupancy(self) -> list[float]:
+        """Per-device-group mean busy-slot fraction — the cost-model
+        router's balance evidence (both groups nonzero under load)."""
+        if self.n_steps == 0:
+            return [0.0 for _ in self.groups]
+        return [g.occupied_slot_steps / (self.n_steps * len(g.slot_ids))
+                for g in self.groups]

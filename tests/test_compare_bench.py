@@ -86,3 +86,23 @@ def test_schema_drift_row_without_median_regresses(tmp_path, capsys):
     extra = _bench(tmp_path / "c.json",
                    [_row("k", 1e-3), _row("fresh", None)])
     assert compare.main([base, extra]) == 0
+
+
+def test_mesh_change_noted_never_regresses(tmp_path, capsys):
+    """A row re-measured on a different device mesh moved because the run's
+    shape changed, not because code got slower — the differ must note the
+    mesh change instead of counting the delta as a regression."""
+    base = _bench(tmp_path / "a.json",
+                  [_row("serve_sharded", 1e-3, mesh=None),
+                   _row("k", 1e-3)])
+    new = _bench(tmp_path / "b.json",
+                 [_row("serve_sharded", 5e-3, mesh="1,2"),   # 5x slower
+                  _row("k", 1e-3)])
+    assert compare.main([base, new, "--threshold", "10"]) == 0
+    out = capsys.readouterr().out
+    assert "mesh changed" in out and "not comparable" in out
+    # same mesh on both sides: the ordinary threshold applies again
+    same = _bench(tmp_path / "c.json",
+                  [_row("serve_sharded", 5e-3, mesh=None), _row("k", 1e-3)])
+    assert compare.main([base, same, "--threshold", "10"]) == 1
+    assert "REGRESSION" in capsys.readouterr().out

@@ -122,12 +122,13 @@ def test_victim_policy_fewest_with_lifo_tiebreak(demand_sched):
     _fake_slot(sched, 2, n_tokens=2, admit_seq=3, pages=[3])
     # fewest generated: slots 1 and 2 tie at 2 tokens; LIFO tiebreak picks
     # the later-admitted slot 2
-    assert sched._choose_victim().slot == 2
+    assert sched._choose_victim(sched.groups[0]).slot == 2
     sched.preempt_policy = "lifo"
     try:
-        assert sched._choose_victim().slot == 2  # latest admitted outright
+        # latest admitted outright
+        assert sched._choose_victim(sched.groups[0]).slot == 2
         _fake_slot(sched, 0, n_tokens=5, admit_seq=9, pages=[1])
-        assert sched._choose_victim().slot == 0
+        assert sched._choose_victim(sched.groups[0]).slot == 0
     finally:
         sched.preempt_policy = "fewest"
         _clear_slots(sched)
@@ -140,8 +141,8 @@ def test_anti_thrash_guard_requires_covering_victim(demand_sched):
     _clear_slots(sched)
     _fake_slot(sched, 0, n_tokens=1, admit_seq=1, pages=[1])        # 1 page
     _fake_slot(sched, 1, n_tokens=8, admit_seq=2, pages=[2, 3, 4])  # 3 pages
-    assert sched._choose_victim(shortfall=2).slot == 1
-    assert sched._choose_victim(shortfall=4) is None
+    assert sched._choose_victim(sched.groups[0], shortfall=2).slot == 1
+    assert sched._choose_victim(sched.groups[0], shortfall=4) is None
     _clear_slots(sched)
 
 
@@ -156,13 +157,13 @@ def test_resume_progress_floor_protects_resumed_slots(demand_sched):
     resumed = _fake_slot(sched, 0, n_tokens=3, admit_seq=2, pages=[1],
                          resume_base=3)        # 0 new tokens since resume
     fresh = _fake_slot(sched, 1, n_tokens=3 + floor, admit_seq=1, pages=[2])
-    assert sched._choose_victim() is fresh     # resumed slot is protected
+    assert sched._choose_victim(sched.groups[0]) is fresh     # resumed slot is protected
     resumed.tokens = list(range(3 + floor))    # floor reached: eligible,
     # and the token-count tie breaks LIFO to the later-admitted slot 0
-    assert sched._choose_victim() is resumed
+    assert sched._choose_victim(sched.groups[0]) is resumed
     fresh.request = None
     resumed.tokens = list(range(3))            # protected again
-    assert sched._choose_victim() is None
+    assert sched._choose_victim(sched.groups[0]) is None
     _clear_slots(sched)
 
 

@@ -23,7 +23,10 @@ Pool sizes sweep down to near-exhaustion so lifetime mode exercises
 deferred admission and demand mode exercises the preempt/resume state
 machine; shared-prefix traces (all prompts opening with the same tokens)
 exercise cache hits, shared-page admission and cache eviction under
-pressure.  Engines are cached per draw key (jit programs compile once —
+pressure.  A ``device_groups=2`` dimension partitions slots and pages into
+two groups (DESIGN.md §13): every invariant above holds per group, plus
+group ownership — no slot or cache ever references a page outside its
+group's private range.  Engines are cached per draw key (jit programs compile once —
 slot and pool reuse across examples is exactly production slot reuse); the
 example budget is raised in the tier-2 CI lane via ``SERVE_SOAK_EXAMPLES``.
 """
@@ -106,27 +109,36 @@ def _reference(arch, prompt_idx, max_new, share=False):
 def _check_invariants(sched):
     from collections import Counter
 
-    alloc, eng = sched.allocator, sched.engine
-    # conservation: free + outstanding is exactly the usable pool
-    assert alloc.n_free + alloc.n_outstanding == \
-        alloc.num_pages - alloc.n_reserved
-    owned = [p for s in sched.slots for p in s.page_ids]
-    mapped = Counter(owned)
-    cached = sched.prefix.pages() if sched.prefix is not None else set()
-    # a slot's own row never repeats a page; the trash page has no holders
-    for s in sched.slots:
-        assert len(s.page_ids) == len(set(s.page_ids))
-    assert 0 not in mapped and 0 not in cached
-    # outstanding = slot-mapped ∪ cache-held; per-page refcounts are
-    # exactly the mapping slots plus the cache's own hold, and a page is
-    # writable iff it has a single reference
-    assert set(mapped) | cached == set(alloc.outstanding)
-    for p in alloc.outstanding:
-        assert alloc.refcount(p) == mapped[p] + (1 if p in cached else 0)
-        assert alloc.writable(p) == (alloc.refcount(p) == 1)
-    if sched.prefix is None:
-        # sharing off: the original exclusive-ownership invariant
-        assert all(c == 1 for c in mapped.values())
+    eng = sched.engine
+    for g in sched.groups:
+        alloc = g.allocator
+        # per-group conservation: free + outstanding is exactly the
+        # group's private pool
+        assert alloc.n_free + alloc.n_outstanding == \
+            alloc.num_pages - alloc.n_reserved
+        owned = [p for i in g.slot_ids for p in sched.slots[i].page_ids]
+        mapped = Counter(owned)
+        cached = g.prefix.pages() if g.prefix is not None else set()
+        # group ownership: every page a group's slot (or its cache) refs
+        # lies inside the group's private range — no cross-group refs
+        for p in set(mapped) | cached:
+            assert g.page_lo <= p < g.page_hi, \
+                f"group {g.gid} references foreign page {p}"
+        # a slot's own row never repeats a page; the trash page is unowned
+        for i in g.slot_ids:
+            s = sched.slots[i]
+            assert len(s.page_ids) == len(set(s.page_ids))
+        assert 0 not in mapped and 0 not in cached
+        # outstanding = slot-mapped ∪ cache-held; per-page refcounts are
+        # exactly the mapping slots plus the cache's own hold, and a page
+        # is writable iff it has a single reference
+        assert set(mapped) | cached == set(alloc.outstanding)
+        for p in alloc.outstanding:
+            assert alloc.refcount(p) == mapped[p] + (1 if p in cached else 0)
+            assert alloc.writable(p) == (alloc.refcount(p) == 1)
+        if g.prefix is None:
+            # sharing off: the original exclusive-ownership invariant
+            assert all(c == 1 for c in mapped.values())
     for s in sched.slots:
         n = len(s.page_ids)
         row = eng.page_table[s.slot]
@@ -147,12 +159,14 @@ def _check_invariants(sched):
        demand=st.booleans(),
        policy=st.sampled_from(("fewest", "lifo")),
        watermark=st.integers(0, 2),
-       share=st.booleans())
+       share=st.booleans(),
+       groups=st.sampled_from((1, 2)))
 @settings(max_examples=MAX_EXAMPLES, deadline=None,
           suppress_health_check=[HealthCheck.too_slow,
                                  HealthCheck.data_too_large])
 def test_serve_soak_invariants_and_bitmatch(arch, reqs, pool, demand,
-                                            policy, watermark, share):
+                                            policy, watermark, share,
+                                            groups):
     eng = _engine(arch)
     # the engine is shared across examples (jit reuse); a PREVIOUS failing
     # example may have left committed rows behind — park everything on the
@@ -165,8 +179,10 @@ def test_serve_soak_invariants_and_bitmatch(arch, reqs, pool, demand,
         reserve="demand" if demand else "lifetime",
         preempt_policy=policy,
         admit_watermark=watermark if demand else 0,
-        prefix_cache=share)    # mamba2 stays uncached (SSM state): the
-    #                           knob must be safe to pass uniformly
+        prefix_cache=share,    # mamba2 stays uncached (SSM state): the
+        #                        knob must be safe to pass uniformly
+        device_groups=groups)  # 2: slots 2/1, pages split — uneven is the
+    #                            production case (batch % groups != 0)
     rids = {}
     for idx, max_new in reqs:
         rid = sched.submit(_prompts(arch, share)[idx], max_new=max_new)
@@ -179,17 +195,21 @@ def test_serve_soak_invariants_and_bitmatch(arch, reqs, pool, demand,
         steps += 1
         assert steps < STEP_CAP, (
             f"drain did not finish in {STEP_CAP} steps "
-            f"(reqs={reqs}, pool={pool}, demand={demand}, share={share})")
+            f"(reqs={reqs}, pool={pool}, demand={demand}, share={share}, "
+            f"groups={groups})")
 
-    # drain: outstanding pages are exactly the cache-held ones (each at
-    # refcount 1 — the cache's own hold), none after a flush; table fully
-    # parked, queue empty
+    # drain: per group, outstanding pages are exactly the cache-held ones
+    # (each at refcount 1 — the cache's own hold), none after a flush;
+    # table fully parked, queue empty
     _check_invariants(sched)
-    cached = sched.prefix.pages() if sched.prefix is not None else set()
-    assert set(sched.allocator.outstanding) == cached
-    assert all(sched.allocator.refcount(p) == 1 for p in cached)
+    for g in sched.groups:
+        cached = g.prefix.pages() if g.prefix is not None else set()
+        assert set(g.allocator.outstanding) == cached
+        assert all(g.allocator.refcount(p) == 1 for p in cached)
     sched.flush_prefix_cache()
-    assert sched.allocator.n_outstanding == 0
+    for g in sched.groups:
+        assert g.allocator.n_outstanding == 0, \
+            f"group {g.gid} leaked pages after drain"
     assert (sched.engine.page_table == 0).all()
     assert not sched._suspended
     # every admitted request completed exactly once…
@@ -205,7 +225,7 @@ def test_serve_soak_invariants_and_bitmatch(arch, reqs, pool, demand,
             _reference(arch, idx, max_new, share), (
                 f"rid {rid} (prompt {idx}, max_new {max_new}) diverged "
                 f"(pool={pool}, demand={demand}, share={share}, "
-                f"preempts={sched.n_preempted})")
+                f"groups={groups}, preempts={sched.n_preempted})")
 
 
 def test_shim_not_active_in_ci():

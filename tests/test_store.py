@@ -175,3 +175,92 @@ def test_meta_roundtrip(store):
     store.set_meta("graph", "demo-v1")
     store.set_meta("graph", "demo-v2")
     assert store.get_meta("graph") == "demo-v2"
+
+
+# -- gc --------------------------------------------------------------------
+
+def test_gc_noop_without_limits(store):
+    store.put_result("k", [np.zeros(2)])
+    assert store.gc() == {"rows": 0, "spill_files": 0}
+    assert store.state("k") == "done"
+
+
+def test_gc_prunes_by_age(store):
+    now = time.time()
+    store.put_result("old", [np.zeros(2)])
+    store.put_result("fresh", [np.ones(2)])
+    with store._lock, store._conn:
+        store._conn.execute("UPDATE jobs SET updated_at=? WHERE key='old'",
+                            (now - 3600,))
+    pruned = store.gc(max_age_s=60, now=now)
+    assert pruned == {"rows": 1, "spill_files": 0}
+    assert store.state("old") is None
+    assert store.load_result("fresh") is not None
+
+
+def test_gc_caps_rows_keeping_most_recent(store):
+    now = time.time()
+    for i in range(6):
+        store.put_result(f"k{i}", [np.full(2, i)])
+        with store._lock, store._conn:
+            store._conn.execute("UPDATE jobs SET updated_at=? WHERE key=?",
+                                (now - 100 + i, f"k{i}"))
+    pruned = store.gc(max_rows=2, now=now)
+    assert pruned["rows"] == 4
+    assert store.state("k5") == "done" and store.state("k4") == "done"
+    assert all(store.state(f"k{i}") is None for i in range(4))
+
+
+def test_gc_never_touches_running_rows(store):
+    """The leak assertion: in-flight scheduling state is structurally
+    exempt — neither an ancient age nor a zero row cap may drop a row
+    that is not ``done``."""
+    now = time.time()
+    store.register_worker(0)
+    for key, state in (("run", "running"), ("pend", "pending"),
+                       ("lost", "lost")):
+        store.mark_running(key, worker=0)
+    with store._lock, store._conn:
+        store._conn.execute("UPDATE jobs SET state='pending' WHERE key='pend'")
+        store._conn.execute("UPDATE jobs SET state='lost' WHERE key='lost'")
+        store._conn.execute("UPDATE jobs SET updated_at=?", (now - 9999,))
+    pruned = store.gc(max_age_s=0, max_rows=0, now=now)
+    assert pruned == {"rows": 0, "spill_files": 0}
+    assert store.state("run") == "running"
+    assert store.state("pend") == "pending"
+    assert store.state("lost") == "lost"
+
+
+def test_gc_unlinks_spill_files(tmp_path):
+    s = JobStore(tmp_path / "jobs.sqlite", spill_bytes=64)
+    try:
+        now = time.time()
+        s.put_result("big_old", [np.zeros(64)])
+        s.put_result("big_new", [np.ones(64)])
+        with s._lock, s._conn:
+            s._conn.execute(
+                "UPDATE jobs SET updated_at=? WHERE key='big_old'",
+                (now - 3600,))
+        pruned = s.gc(max_age_s=60, now=now)
+        assert pruned == {"rows": 1, "spill_files": 1}
+        assert sorted(os.listdir(s.spill_dir)) == ["big_new.npz"]
+        # pruning left no orphans behind for the hygiene check to flag
+        assert s.check_leaks() == []
+    finally:
+        s.close()
+
+
+def test_gc_age_and_cap_compose(store):
+    now = time.time()
+    for i in range(5):
+        store.put_result(f"k{i}", [np.full(2, i)])
+        with store._lock, store._conn:
+            age = 3600 if i < 2 else 100 - i
+            store._conn.execute("UPDATE jobs SET updated_at=? WHERE key=?",
+                                (now - age, f"k{i}"))
+    # age drops k0/k1; of the survivors (k2, k3, k4) the cap keeps the two
+    # most recent (k4 is youngest: age 100-i decreases with i)
+    pruned = store.gc(max_age_s=600, max_rows=2, now=now)
+    assert pruned["rows"] == 3
+    assert store.state("k4") == "done" and store.state("k3") == "done"
+    assert all(store.state(k) is None for k in ("k0", "k1", "k2"))

@@ -10,13 +10,39 @@ regression shows up in the log the moment a PR introduces it, without
 hard-failing on machine noise (`|| true` in the workflow).
 
 Rows present in only one file are reported but never fail the diff: suites
-legitimately gain rows (new workloads) and, rarely, retire them.
+legitimately gain rows (new workloads) and, rarely, retire them.  The same
+holds for row EXTRAS: robustness counters (goodput, typed shed counts,
+watchdog trips) are printed as informational deltas when present but never
+counted — only ``median_s`` gates, because the extras measure workload
+composition (how much was shed under an overload trace), not kernel speed.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+
+#: row extras surfaced informationally in the diff — robustness telemetry
+#: (DESIGN.md §14) whose drift is worth seeing but must never gate
+INFO_EXTRAS = ("goodput_tok_per_s", "goodput_gain_pct", "shed_deadline",
+               "shed_queue_full", "shed_never_fits", "n_expired",
+               "watchdog_trips")
+
+
+def extras_notes(b: dict, n: dict) -> list[str]:
+    """Informational deltas for the robustness extras a matched row pair
+    carries — new extras (an old baseline predating them) are labelled,
+    never treated as schema drift."""
+    notes = []
+    for k in INFO_EXTRAS:
+        bv, nv = b.get(k), n.get(k)
+        if nv is None:
+            continue
+        if bv is None:
+            notes.append(f"{k}={nv:g} (new extra, informational)")
+        elif bv != nv:
+            notes.append(f"{k} {bv:g} -> {nv:g}")
+    return notes
 
 
 def load_rows(path: str) -> dict[str, dict]:
@@ -74,6 +100,8 @@ def compare(base: dict[str, dict], new: dict[str, dict],
             flag = "  (improved)"
         lines.append(f"  {name:>28}: {b_med * 1e6:10.1f} -> "
                      f"{n_med * 1e6:10.1f} us  {delta:+7.1f}%{flag}")
+        for note in extras_notes(b, n):
+            lines.append(f"  {'':>28}  . {note}")
     return lines, n_regressed
 
 

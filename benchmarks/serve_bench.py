@@ -81,6 +81,12 @@ class _Args:
     max_new_mix: tuple | None = None
     prefix_cache: bool = False
     shared_prefix_len: int = 0
+    # deadline-aware serving (DESIGN.md §14)
+    ttft_deadline: float | None = None
+    total_deadline: float | None = None
+    enforce_deadlines: bool = True
+    watchdog_budget: float | None = None
+    max_restarts: int | None = None
 
 
 def _smoke_args():
@@ -145,6 +151,21 @@ def _full_constrained():
                 max_new_mix=(8, 16, 32, 64))
 
 
+def _smoke_overload():
+    # the shedding trace: Poisson arrivals at 2x the calibrated service
+    # capacity with a TTFT deadline every request declares.  Without
+    # shedding the queue grows linearly and late requests burn decode slots
+    # on answers nobody is waiting for; deadline-aware admission drops them
+    # up front, so the slots serve requests that can still meet their SLO
+    return dict(batch=4, n_requests=24, max_new=8, prompt_lens=(8, 16),
+                page_size=16, prefill_chunk=32)
+
+
+def _full_overload():
+    return dict(batch=8, n_requests=48, max_new=16, prompt_lens=(8, 16, 32),
+                page_size=16, prefill_chunk=64)
+
+
 def _make_args(engine: str, *, batch, n_requests, max_new, prompt_lens,
                rate_per_s: float = 0.0, seed: int = 0, paged: bool = False,
                page_size: int = 16, num_pages: int | None = None,
@@ -153,7 +174,12 @@ def _make_args(engine: str, *, batch, n_requests, max_new, prompt_lens,
                admit_watermark: int = 0,
                max_new_mix: tuple | None = None,
                prefix_cache: bool = False,
-               shared_prefix_len: int = 0) -> _Args:
+               shared_prefix_len: int = 0,
+               ttft_deadline: float | None = None,
+               total_deadline: float | None = None,
+               enforce_deadlines: bool = True,
+               watchdog_budget: float | None = None,
+               max_restarts: int | None = None) -> _Args:
     return _Args(engine=engine, batch=batch, strategy="greedy",
                  prompt_lens=tuple(prompt_lens), max_pending=None,
                  n_requests=n_requests, rate=rate_per_s, max_new=max_new,
@@ -162,7 +188,10 @@ def _make_args(engine: str, *, batch, n_requests, max_new, prompt_lens,
                  reserve=reserve, preempt_policy=preempt_policy,
                  admit_watermark=admit_watermark, max_new_mix=max_new_mix,
                  prefix_cache=prefix_cache,
-                 shared_prefix_len=shared_prefix_len)
+                 shared_prefix_len=shared_prefix_len,
+                 ttft_deadline=ttft_deadline, total_deadline=total_deadline,
+                 enforce_deadlines=enforce_deadlines,
+                 watchdog_budget=watchdog_budget, max_restarts=max_restarts)
 
 
 def run_engine(engine: str, *, cfg, params, repeats: int = 1, **kw) -> dict:
@@ -403,6 +432,49 @@ def run(smoke: bool = False) -> list[dict]:
         * 100.0 if nc["tok_per_s"] else 0.0,
         chunk_traces=pc["trace_counts"]["chunk_prefill"],
         decode_traces=pc["trace_counts"]["decode"]))
+
+    # -- overload trace: deadline-aware shedding vs serve-everything under
+    # a 2x-overloaded Poisson trace at EQUAL pool bytes (DESIGN.md §14).
+    # A calibration run (same engine, closed-loop) measures sustainable
+    # tok/s; the overload trace then arrives at twice the implied request
+    # rate with a TTFT deadline sized so roughly the first half of the
+    # backlog is meetable.  ``goodput_tok_per_s`` counts only tokens of
+    # requests that met every declared deadline — the shedding scheduler
+    # must beat the no-shedding baseline on it (tok_per_s alone would
+    # reward the baseline for generating tokens nobody is waiting for).
+    ov = _smoke_overload() if smoke else _full_overload()
+    obatch = ov["batch"]
+    omax_len = max(ov["prompt_lens"]) + ov["max_new"] + 8
+    ov_pages = 1 + obatch * (-(-omax_len // ov["page_size"]))
+    ovp = dict(ov, paged=True, num_pages=ov_pages)
+    calib = run_engine("direct", cfg=cfg, params=params, **ovp)
+    cap_tok_s = calib["tok_per_s"] or 1.0
+    rate = 2.0 * cap_tok_s / ov["max_new"]          # 2x sustainable req/s
+    ttft = ov["n_requests"] * ov["max_new"] / (4.0 * cap_tok_s)
+    over = dict(ovp, rate_per_s=rate, ttft_deadline=ttft)
+    stats = compare_engines(
+        {"shed": _make_args("direct", **over),
+         "noshed": _make_args("direct",
+                              **dict(over, enforce_deadlines=False))},
+        cfg=cfg, params=params)
+    sh, ns = stats["shed"], stats["noshed"]
+    rows.append(_row(
+        "serve_overload", obatch, ov["max_new"], sh,
+        kv_budget_tokens=(ov_pages - 1) * ov["page_size"],
+        pool_pages=ov_pages, n_slots=obatch,
+        offered_rate_req_s=rate,
+        capacity_tok_per_s=cap_tok_s,
+        ttft_deadline_s=ttft,
+        goodput_tok_per_s=sh["goodput_tok_per_s"],
+        shed_deadline=sh["shed_deadline"],
+        shed_queue_full=sh["shed_queue_full"],
+        shed_never_fits=sh["shed_never_fits"],
+        n_expired=sh["n_expired"],
+        noshed_goodput_tok_per_s=ns["goodput_tok_per_s"],
+        noshed_tok_per_s=ns["tok_per_s"],
+        goodput_gain_pct=(sh["goodput_tok_per_s"]
+                          / ns["goodput_tok_per_s"] - 1.0) * 100.0
+        if ns["goodput_tok_per_s"] else 0.0))
 
     # -- sharded trace: TP/DP device-mesh serving in forced-2-device
     # subprocesses (DESIGN.md §13)

@@ -241,17 +241,29 @@ class JobStore:
 
     def gc(self, *, max_age_s: float | None = None,
            max_rows: int | None = None,
-           now: float | None = None) -> dict[str, int]:
+           now: float | None = None,
+           exempt_requests: Iterable[str] = ()) -> dict[str, int]:
         """Prune ``done`` rows (and their spill files) so a long-lived store
         does not grow without bound: drop rows older than ``max_age_s``,
         then — of the survivors — keep only the ``max_rows`` most recently
         updated.  Only ``done`` rows are ever candidates: pending/running/
         lost rows carry live scheduling state and dropping one would
         re-execute (or worse, double-claim) in-flight work, so the state
-        filter is structural, not a fast path.  Returns
-        ``{"rows": pruned_rows, "spill_files": unlinked_files}``."""
+        filter is structural, not a fast path.
+
+        ``requests`` rows (serve suspended-token payloads) are pruned by
+        the same ``max_age_s`` cutoff: the serving path deletes them at
+        retire, so in steady state none reach the cutoff — rows that DO are
+        orphans of a master that died before retiring them and would
+        otherwise leak forever.  ``exempt_requests`` protects keys a live
+        run still counts on (its running/suspended rids); ``max_rows``
+        deliberately does not apply — age is the only evidence a request
+        row is orphaned, whereas result rows are re-computable memoisation.
+
+        Returns ``{"rows": pruned_rows, "spill_files": unlinked_files,
+        "request_rows": pruned_request_rows}``."""
         if max_age_s is None and max_rows is None:
-            return {"rows": 0, "spill_files": 0}
+            return {"rows": 0, "spill_files": 0, "request_rows": 0}
         if max_age_s is not None and max_age_s < 0:
             raise ValueError(f"max_age_s {max_age_s} must be >= 0")
         if max_rows is not None and max_rows < 0:
@@ -275,6 +287,15 @@ class JobStore:
             self._conn.executemany(
                 "DELETE FROM jobs WHERE key=? AND state='done'",
                 [(key,) for key, _ in doomed])
+            req_doomed: list[str] = []
+            if max_age_s is not None:
+                exempt = set(exempt_requests)
+                req_doomed = [rid for (rid,) in self._conn.execute(
+                    "SELECT rid FROM requests WHERE updated_at < ?",
+                    (now - max_age_s,)).fetchall() if rid not in exempt]
+                self._conn.executemany(
+                    "DELETE FROM requests WHERE rid=?",
+                    [(r,) for r in req_doomed])
         spilled = 0
         for _, spill in doomed:
             if spill is None:
@@ -284,7 +305,8 @@ class JobStore:
                 spilled += 1
             except FileNotFoundError:
                 pass
-        return {"rows": len(doomed), "spill_files": spilled}
+        return {"rows": len(doomed), "spill_files": spilled,
+                "request_rows": len(req_doomed)}
 
     # -- worker registration / heartbeats ---------------------------------
     def register_worker(self, wid: int, pid: int | None = None) -> None:

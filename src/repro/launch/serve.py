@@ -45,7 +45,9 @@ from repro.serve import (Engine, HyParRequestTracker, PagedEngine, Request,
 def build_trace(rng: np.random.Generator, cfg, *, n_requests: int,
                 rate_per_s: float, prompt_lens: list[int],
                 max_new, budget_new: int | None = None,
-                shared_prefix_len: int = 0) -> list[Request]:
+                shared_prefix_len: int = 0,
+                ttft_deadline_s: float | None = None,
+                total_deadline_s: float | None = None) -> list[Request]:
     """Open-loop request trace: Poisson arrivals (exponential gaps at
     ``rate_per_s``), prompt lengths drawn uniformly from ``prompt_lens``.
 
@@ -57,7 +59,11 @@ def build_trace(rng: np.random.Generator, cfg, *, n_requests: int,
 
     ``shared_prefix_len`` > 0 makes every prompt open with the SAME token
     prefix (a system prompt) followed by a random remainder — the workload
-    shape prefix caching exists for."""
+    shape prefix caching exists for.
+
+    ``ttft_deadline_s`` / ``total_deadline_s`` stamp the same SLO onto every
+    request; the scheduler sheds requests predicted to miss the TTFT
+    deadline and retires ones past the total deadline (DESIGN.md §14)."""
     t = 0.0
     mix = [int(m) for m in np.atleast_1d(max_new)]
     prefix = None
@@ -82,7 +88,9 @@ def build_trace(rng: np.random.Generator, cfg, *, n_requests: int,
         reqs.append(Request(rid=rid, tokens=toks,
                             max_new=int(rng.choice(mix)),
                             budget_new=budget_new,
-                            arrival_s=t, enc_embeds=enc))
+                            arrival_s=t, enc_embeds=enc,
+                            ttft_deadline_s=ttft_deadline_s,
+                            total_deadline_s=total_deadline_s))
     return reqs
 
 
@@ -139,7 +147,12 @@ def make_scheduler(cfg, params, args, *, sp: SamplingParams,
                           admit_watermark=getattr(args, "admit_watermark", 0),
                           prefix_cache=getattr(args, "prefix_cache", False),
                           prefix_admit=getattr(args, "prefix_admit", 1),
-                          device_groups=device_groups)
+                          device_groups=device_groups,
+                          enforce_deadlines=getattr(args, "enforce_deadlines",
+                                                    True),
+                          watchdog_budget_s=getattr(args, "watchdog_budget",
+                                                    None),
+                          max_restarts=getattr(args, "max_restarts", None))
 
 
 def prepare_trace(cfg, params, args, *, sp: SamplingParams):
@@ -161,7 +174,9 @@ def prepare_trace(cfg, params, args, *, sp: SamplingParams):
                        max_new=(mix if mix else args.max_new),
                        budget_new=(args.max_new if mix else None),
                        shared_prefix_len=getattr(args, "shared_prefix_len",
-                                                 0))
+                                                 0),
+                       ttft_deadline_s=getattr(args, "ttft_deadline", None),
+                       total_deadline_s=getattr(args, "total_deadline", None))
     warm_lens = list(args.prompt_lens)
     if getattr(sched, "demand", False):
         # resume re-prefills (prompt + retained tokens) land in arbitrary
@@ -170,6 +185,12 @@ def prepare_trace(cfg, params, args, *, sp: SamplingParams):
         warm_lens += [b for b in sched.engine.chunk_buckets
                       if b + 2 <= sched.engine.max_len]
     sched.run(warmup_requests(rng, cfg, prompt_lens=warm_lens))
+    sched.reset_metrics()          # warmup rids recur in the second pass
+    # second, compile-free pass: the first pass's steps are dominated by
+    # compiles, and the step/retire EWMAs (which deliberately survive
+    # reset_metrics as shedding calibration, DESIGN.md §14) would otherwise
+    # enter the measured replays 100-1000x above steady state
+    sched.run(warmup_requests(rng, cfg, prompt_lens=list(args.prompt_lens)))
     sched.reset_metrics()
     if getattr(sched, "prefix_cache_active", False):
         # drop the warmup prompts' cache entries (and their held pages):
@@ -192,11 +213,28 @@ def replay_trace(sched, reqs) -> tuple:
     rate = sum(r.n_generated for r in results) / wall if wall > 0 else 0.0
     # preempt/defer counters ride in the snapshot: reset_metrics() clears
     # them on the scheduler, so trace_stats cannot read them post hoc
+    outcome_hist: dict[str, int] = {}
+    for o in sched.outcomes.values():
+        outcome_hist[o.outcome] = outcome_hist.get(o.outcome, 0) + 1
+    robust = {
+        "shed_queue_full": sched.queue.shed_queue_full,
+        "shed_never_fits": sched.queue.shed_never_fits,
+        "shed_deadline": sched.queue.shed_deadline,
+        "outcomes": outcome_hist,
+        "goodput_tokens": sched.goodput_tokens,
+        "watchdog_trips": sched.watchdog_trips,
+        "n_expired": sched.n_expired,
+        "n_failed": sched.n_failed,
+        "group_failovers": sched.n_group_failovers,
+        "group_rejoins": sched.n_group_rejoins,
+        "suspended_rids": sorted(sched._suspended),
+    }
     snap = (rate, results, wall, sched.occupancy, sched.queue.n_rejected,
             sched.n_preempted, sched.resume_tokens_recomputed,
             sched.n_admit_deferred, sched.n_prefix_lookups,
             sched.n_prefix_hits, sched.pages_shared, sched.n_cow_copies,
-            sched.n_cache_insert_deferred, tuple(sched.group_occupancy))
+            sched.n_cache_insert_deferred, tuple(sched.group_occupancy),
+            robust)
     sched.reset_metrics()              # also clears occupancy + counters
     return snap
 
@@ -225,7 +263,7 @@ def trace_stats(args, sched, snap) -> dict:
     (_, results, wall, occupancy, n_rejected,
      n_preempted, resume_recomputed, n_deferred,
      n_lookups, n_hits, pages_shared, cow_copies,
-     cache_insert_deferred, group_occupancy) = snap
+     cache_insert_deferred, group_occupancy, robust) = snap
     n_tok = sum(r.n_generated for r in results)
     # NaN, not 0.0, when nothing completed: a broken/all-shed run must not
     # record perfect-looking latencies into the BENCH trajectory
@@ -267,6 +305,12 @@ def trace_stats(args, sched, snap) -> dict:
         "mesh": getattr(args, "mesh", None) or None,
         "device_groups": len(sched.groups),
         "group_occupancy": [float(x) for x in group_occupancy],
+        # robustness surface (DESIGN.md §14): typed shed counters, terminal
+        # outcome histogram, deadline goodput, watchdog/failover counts
+        **robust,
+        "goodput_tok_per_s": (robust["goodput_tokens"] / wall
+                              if wall > 0 else 0.0),
+        "enforce_deadlines": getattr(sched, "enforce_deadlines", True),
     }
     if sched.paged:
         # per-device KV budget: pool tokens scaled by the byte fraction one
@@ -419,6 +463,30 @@ def main(argv=None):
     ap.add_argument("--store-gc-rows", type=int, default=None, metavar="N",
                     help="after the run, keep at most N most-recent done "
                          "job-store rows")
+    # deadline-aware serving + robustness (DESIGN.md §14)
+    ap.add_argument("--ttft-deadline", type=float, default=None,
+                    metavar="SECS",
+                    help="trace mode: stamp this first-token deadline on "
+                         "every request; admission sheds requests whose "
+                         "predicted TTFT already exceeds it")
+    ap.add_argument("--total-deadline", type=float, default=None,
+                    metavar="SECS",
+                    help="trace mode: stamp this whole-answer deadline on "
+                         "every request; requests past it are retired as "
+                         "expired")
+    ap.add_argument("--no-enforce-deadlines", dest="enforce_deadlines",
+                    action="store_false",
+                    help="observe deadlines in the goodput metric but never "
+                         "shed or expire on them (the no-shedding baseline)")
+    ap.add_argument("--watchdog-budget", type=float, default=None,
+                    metavar="SECS",
+                    help="wall-clock budget per prefill chunk / decode wave; "
+                         "a step over budget trips the watchdog, frees the "
+                         "slot and re-queues the request")
+    ap.add_argument("--max-restarts", type=int, default=None, metavar="N",
+                    help="fault-eviction budget per request; a request "
+                         "evicted more than N times fails terminally "
+                         "(default: unlimited)")
     args = ap.parse_args(argv)
     if (args.store or args.resume) and args.engine != "hypar":
         ap.error("--store/--resume require --engine hypar (the tracker "
@@ -448,6 +516,13 @@ def main(argv=None):
         if spec.size > 1 and not args.paged:
             ap.error("--mesh with more than one device requires --paged "
                      "(the sharding rules cover the paged pool)")
+    if not args.trace and (args.ttft_deadline is not None
+                           or args.total_deadline is not None
+                           or args.watchdog_budget is not None
+                           or args.max_restarts is not None):
+        ap.error("--ttft-deadline/--total-deadline/--watchdog-budget/"
+                 "--max-restarts require --trace (wave mode has no "
+                 "scheduler)")
     if (args.store_gc is not None or args.store_gc_rows is not None) \
             and not args.store:
         ap.error("--store-gc/--store-gc-rows need --store (nothing to "
@@ -481,6 +556,16 @@ def main(argv=None):
             print(f"prefix_cache: hit_rate={stats['prefix_hit_rate']*100:.0f}% "
                   f"pages_shared={stats['pages_shared']} "
                   f"cow_copies={stats['cow_copies']}")
+        if (args.ttft_deadline is not None or args.total_deadline is not None
+                or args.watchdog_budget is not None):
+            print(f"deadlines: enforce={stats['enforce_deadlines']} "
+                  f"goodput={stats['goodput_tok_per_s']:.1f} tok/s "
+                  f"shed(queue={stats['shed_queue_full']} "
+                  f"never_fits={stats['shed_never_fits']} "
+                  f"deadline={stats['shed_deadline']}) "
+                  f"expired={stats['n_expired']} failed={stats['n_failed']} "
+                  f"watchdog_trips={stats['watchdog_trips']} "
+                  f"failovers={stats['group_failovers']}")
         print(f"tok/s={stats['tok_per_s']:.1f} "
               f"ttft p50={stats['ttft_p50_s']*1e3:.1f}ms "
               f"p95={stats['ttft_p95_s']*1e3:.1f}ms "
@@ -491,24 +576,34 @@ def main(argv=None):
             import json
             with open(args.stats_json, "w") as f:
                 json.dump(stats, f, indent=1, default=float)
-        _maybe_store_gc(args)
+        _maybe_store_gc(args, live_rids=stats.get("suspended_rids", ()))
         return stats
     run_waves(cfg, params, args, sp=sp)
     _maybe_store_gc(args)
     return None
 
 
-def _maybe_store_gc(args) -> None:
-    """Post-run job-store hygiene (``--store-gc`` / ``--store-gc-rows``)."""
+def _maybe_store_gc(args, live_rids=()) -> None:
+    """Post-run job-store hygiene (``--store-gc`` / ``--store-gc-rows``).
+
+    ``live_rids`` — rids still suspended on THIS run's scheduler; their
+    durable recovery rows are exempt from the age prune (they are live
+    recovery state, not orphans of a dead master)."""
     if args.store_gc is None and getattr(args, "store_gc_rows", None) is None:
         return
     from repro.core.store import JobStore
+    from repro.serve import HyParRequestTracker
     store = JobStore(args.store)
     try:
+        exempt = [f"{HyParRequestTracker.STORE_PREFIX}{rid}"
+                  for rid in live_rids]
         pruned = store.gc(max_age_s=args.store_gc,
-                          max_rows=args.store_gc_rows)
+                          max_rows=args.store_gc_rows,
+                          exempt_requests=exempt)
         print(f"store gc: pruned {pruned['rows']} done row(s), "
-              f"{pruned['spill_files']} spill file(s) from {args.store}")
+              f"{pruned['spill_files']} spill file(s), "
+              f"{pruned['request_rows']} stale request row(s) from "
+              f"{args.store}")
     finally:
         store.close()
 

@@ -1,15 +1,16 @@
 from .engine import (Engine, PagedEngine, SamplingParams, chunk_buckets_for,
                      chunk_plan, count_generated)
 from .prefix import PrefixCache
-from .scheduler import (DEFAULT_BUCKETS, CostModelParams, DeviceGroup,
-                        HyParRequestTracker, PageAllocator, Request,
-                        RequestQueue, RequestResult, ServeScheduler,
-                        SlotState)
+from .scheduler import (DEFAULT_BUCKETS, TERMINAL_OUTCOMES, CostModelParams,
+                        DeviceGroup, HyParRequestTracker, PageAllocator,
+                        Request, RequestOutcome, RequestQueue, RequestResult,
+                        ServeScheduler, SlotState)
 
 __all__ = [
     "Engine", "PagedEngine", "SamplingParams", "count_generated",
     "chunk_plan", "chunk_buckets_for",
-    "Request", "RequestResult", "RequestQueue", "SlotState",
+    "Request", "RequestResult", "RequestOutcome", "TERMINAL_OUTCOMES",
+    "RequestQueue", "SlotState",
     "ServeScheduler", "HyParRequestTracker", "PageAllocator", "PrefixCache",
     "DeviceGroup", "CostModelParams", "DEFAULT_BUCKETS",
 ]

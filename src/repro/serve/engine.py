@@ -144,6 +144,17 @@ class Engine:
         traced (= compiled signatures) so far."""
         return self._trace_counts[name]
 
+    def probe_device(self) -> bool:
+        """Serve-layer health probe (DESIGN.md §14): one tiny jitted op must
+        execute on the device and transfer back.  Returns False instead of
+        raising so group failover can keep a group quarantined and retry —
+        a probe is exactly the place failure is expected."""
+        try:
+            x = jnp.ones((2,), jnp.int32)
+            return int(jax.block_until_ready(jnp.sum(x))) == 2
+        except Exception:
+            return False
+
     # -- lifecycle -------------------------------------------------------------
     def fresh_cache(self):
         enc_len = 0
@@ -431,6 +442,18 @@ class PagedEngine:
         """Trace (= compiled-signature) count of program ``name``
         (chunk_prefill|decode)."""
         return self._trace_counts[name]
+
+    def probe_device(self) -> bool:
+        """Serve-layer health probe (DESIGN.md §14): one tiny op must run
+        on the mesh (or the default device) and transfer back.  Returns
+        False instead of raising — group failover keeps the group
+        quarantined and retries on the next probe interval."""
+        try:
+            with self._rules_ctx():
+                x = jnp.ones((2,), jnp.int32)
+                return int(jax.block_until_ready(jnp.sum(x))) == 2
+        except Exception:
+            return False
 
     def _rules_ctx(self):
         """Ambient sharding rules for tracing the jitted programs — a

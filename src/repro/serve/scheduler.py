@@ -49,7 +49,8 @@ from .engine import Engine, PagedEngine, SamplingParams, chunk_plan
 from .prefix import PrefixCache
 
 __all__ = [
-    "Request", "RequestResult", "RequestQueue", "SlotState", "PageAllocator",
+    "Request", "RequestResult", "RequestOutcome", "TERMINAL_OUTCOMES",
+    "RequestQueue", "SlotState", "PageAllocator",
     "PrefixCache", "DeviceGroup", "CostModelParams", "ServeScheduler",
     "HyParRequestTracker", "DEFAULT_BUCKETS",
 ]
@@ -77,6 +78,14 @@ class Request:
     # cap, reserve-on-demand pays only for tokens actually generated.
     # None => the realised length is the cap (PR-4 behaviour).
     budget_new: int | None = None
+    # deadlines (DESIGN.md §14), both relative to ``arrival_s``: the client
+    # stops caring about the first token after ``ttft_deadline_s`` and about
+    # the whole answer after ``total_deadline_s``.  None => no deadline.
+    # Admission sheds requests whose EWMA-predicted TTFT already exceeds the
+    # TTFT deadline; the loop retires requests past their total deadline
+    # with the ``expired`` outcome.
+    ttft_deadline_s: float | None = None
+    total_deadline_s: float | None = None
 
     @property
     def declared_new(self) -> int:
@@ -110,6 +119,37 @@ class RequestResult:
         return [b - a for a, b in zip(self.token_s, self.token_s[1:])]
 
 
+#: the closed set of terminal request outcomes (DESIGN.md §14).  Every
+#: request that enters the scheduler ends in EXACTLY one of these —
+#: ``ServeScheduler._record_outcome`` raises on a second recording, so the
+#: no-request-left-behind guarantee is structural, not best-effort.
+TERMINAL_OUTCOMES = ("completed", "shed_queue", "shed_deadline",
+                     "expired", "failed")
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestOutcome:
+    """One request's terminal fate on the scheduler clock.
+
+    * ``completed`` — finished normally; its :class:`RequestResult` is in
+      ``sched.results``,
+    * ``shed_queue`` — refused at admission for capacity (full queue, or a
+      request that can never fit the engine; ``detail`` says which),
+    * ``shed_deadline`` — refused because its TTFT deadline was already
+      unmeetable (EWMA load prediction, or the deadline passed while
+      queued),
+    * ``expired`` — admitted but its total deadline passed before it
+      finished; partial work is discarded,
+    * ``failed`` — evicted by faults more times than ``max_restarts``
+      allows.
+    """
+
+    rid: int
+    outcome: str
+    finish_s: float
+    detail: str = ""
+
+
 class RequestQueue:
     """FIFO admission queue.  ``max_pending`` is the admission-control knob:
     a full queue sheds the request (``submit`` returns False) instead of
@@ -120,7 +160,22 @@ class RequestQueue:
         self._q: deque[Request] = deque()
         self._next_rid = 0
         self.n_submitted = 0
-        self.n_rejected = 0
+        # typed shed counters (DESIGN.md §14): WHY a request was refused,
+        # not just that one was — `n_rejected` stays as their sum
+        self.shed_queue_full = 0
+        self.shed_never_fits = 0
+        self.shed_deadline = 0
+
+    @property
+    def n_rejected(self) -> int:
+        """Total shed requests — the sum of the typed counters."""
+        return (self.shed_queue_full + self.shed_never_fits
+                + self.shed_deadline)
+
+    def reset_shed(self) -> None:
+        self.shed_queue_full = 0
+        self.shed_never_fits = 0
+        self.shed_deadline = 0
 
     def next_rid(self) -> int:
         rid, self._next_rid = self._next_rid, self._next_rid + 1
@@ -128,7 +183,7 @@ class RequestQueue:
 
     def submit(self, req: Request) -> bool:
         if self.max_pending is not None and len(self._q) >= self.max_pending:
-            self.n_rejected += 1
+            self.shed_queue_full += 1
             return False
         self._q.append(req)
         self.n_submitted += 1
@@ -339,6 +394,14 @@ class DeviceGroup:
     prefix: PrefixCache | None = None
     ewma_step_s: float = 0.0
     occupied_slot_steps: int = 0
+    # failover state machine (DESIGN.md §14): healthy -> unhealthy on
+    # injection or ``unhealthy_after`` watchdog trips (in-flight requests
+    # evicted, pages quarantined at zero outstanding) -> healthy again once
+    # a probe passes.  ``down_step`` is the scheduler-call stamp the probe
+    # interval counts from.
+    healthy: bool = True
+    watchdog_trips: int = 0
+    down_step: int = 0
 
     @property
     def page_lo(self) -> int:
@@ -504,6 +567,16 @@ class HyParRequestTracker:
         self.store.release(job.name)
         self.graph.remove_job(job.name)
 
+    def abandon(self, rid: int) -> None:
+        """The request ends WITHOUT a result (expired / failed / shed after
+        suspension): its dynamic job — if one is still placed — leaves the
+        graph with nothing recorded, and its durable resume row is dropped.
+        ``retire``'s no-result sibling."""
+        self.drop_suspended(rid)
+        job = self._job_of.pop(rid, None)
+        if job is not None:
+            self.graph.remove_job(job.name)
+
     # -- durable resume state (DESIGN.md §12) ----------------------------------
     def persist_suspended(self, rid: int, tokens: Sequence[int],
                           token_s: Sequence[float],
@@ -632,11 +705,29 @@ class ServeScheduler:
                  prefix_cache: bool = False,
                  prefix_admit: int = 1,
                  device_groups: int = 1,
-                 cost_params: CostModelParams | None = None):
+                 cost_params: CostModelParams | None = None,
+                 enforce_deadlines: bool = True,
+                 watchdog_budget_s: float | None = None,
+                 unhealthy_after: int = 3,
+                 probe_interval_steps: int = 5,
+                 max_restarts: int | None = None,
+                 chaos: Any = None):
         if reserve not in ("lifetime", "demand"):
             raise ValueError(f"unknown reserve discipline {reserve!r}")
         if preempt_policy not in ("fewest", "lifo"):
             raise ValueError(f"unknown preempt policy {preempt_policy!r}")
+        if watchdog_budget_s is not None and watchdog_budget_s <= 0:
+            raise ValueError(f"watchdog_budget_s {watchdog_budget_s} must "
+                             f"be positive (None disables the watchdog)")
+        if unhealthy_after < 1:
+            raise ValueError(f"unhealthy_after {unhealthy_after} must be "
+                             f">= 1")
+        if probe_interval_steps < 1:
+            raise ValueError(f"probe_interval_steps {probe_interval_steps} "
+                             f"must be >= 1")
+        if max_restarts is not None and max_restarts < 0:
+            raise ValueError(f"max_restarts {max_restarts} must be >= 0 "
+                             f"(None = unlimited)")
         if admit_watermark and reserve != "demand":
             # the watermark is decode-append headroom — a concept only
             # reserve-on-demand has.  Under lifetime reservation _fits
@@ -748,6 +839,33 @@ class ServeScheduler:
         self.pages_shared = 0
         self.n_cow_copies = 0
         self.n_cache_insert_deferred = 0
+        # robustness layer (DESIGN.md §14): terminal outcomes, deadline
+        # enforcement, the step watchdog and group failover
+        self.enforce_deadlines = enforce_deadlines
+        self.watchdog_budget_s = watchdog_budget_s
+        self.unhealthy_after = unhealthy_after
+        self.probe_interval_steps = probe_interval_steps
+        self.max_restarts = max_restarts
+        self.chaos = chaos
+        self.outcomes: dict[int, RequestOutcome] = {}
+        self._restarts: dict[int, int] = {}
+        self.watchdog_trips = 0
+        self.n_expired = 0
+        self.n_failed = 0
+        self.n_group_failovers = 0
+        self.n_group_rejoins = 0
+        # tokens from completed requests that met every declared deadline —
+        # the numerator of the serve_overload goodput metric
+        self.goodput_tokens = 0
+        # monotone count of step() CALLS — unlike n_steps it advances even
+        # when nothing decodes (queue waiting on an unhealthy group), so
+        # probe scheduling and chaos plans cannot stall with the loop
+        self.step_calls = 0
+        # EWMAs behind deadline admission: wall time per decode step and the
+        # interval between retirements (how fast slots free up)
+        self._ewma_step_s = 0.0
+        self._ewma_retire_s = 0.0
+        self._last_retire_s: float | None = None
 
     @property
     def allocator(self) -> PageAllocator | None:
@@ -796,20 +914,112 @@ class ServeScheduler:
     # -- submission ------------------------------------------------------------
     def submit(self, tokens, max_new: int, *, enc_embeds=None,
                arrival_s: float | None = None,
-               budget_new: int | None = None) -> int | None:
-        """Admit one request.  Returns its rid, or None when shed — either
-        the queue is full, or the request can never fit the engine
-        (prompt bucket + declared budget vs ``max_len``)."""
+               budget_new: int | None = None,
+               ttft_deadline_s: float | None = None,
+               total_deadline_s: float | None = None) -> int | None:
+        """Admit one request.  Returns its rid, or None when shed — the
+        queue is full, the request can never fit the engine (prompt bucket
+        + declared budget vs ``max_len``), or its TTFT deadline is already
+        unmeetable under current load (``sched.outcomes[rid]`` says
+        which)."""
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         req = Request(rid=self.queue.next_rid(), tokens=tokens,
                       max_new=max_new, enc_embeds=enc_embeds,
                       budget_new=budget_new,
                       arrival_s=self.clock() if arrival_s is None
-                      else arrival_s)
+                      else arrival_s,
+                      ttft_deadline_s=ttft_deadline_s,
+                      total_deadline_s=total_deadline_s)
+        return req.rid if self._admit(req) else None
+
+    def _admit(self, req: Request) -> bool:
+        """The one admission gate (``submit()`` and timed replay): the
+        never-fits screen, deadline-aware load shedding, then the bounded
+        queue.  Every refusal records its typed terminal outcome."""
         if not self._fits(req):
-            self.queue.n_rejected += 1
-            return None
-        return req.rid if self.queue.submit(req) else None
+            self.queue.shed_never_fits += 1
+            self._record_outcome(req.rid, "shed_queue", detail="never_fits")
+            return False
+        if self.enforce_deadlines and req.ttft_deadline_s is not None:
+            if self.clock() - req.arrival_s > req.ttft_deadline_s:
+                # certain lateness: the wait alone already blew the deadline,
+                # no estimate involved
+                self.queue.shed_deadline += 1
+                self._record_outcome(req.rid, "shed_deadline",
+                                     detail="TTFT deadline already passed")
+                return False
+            if (self._queue_ahead() > 0
+                    and self._predicted_ttft_s(req) > req.ttft_deadline_s):
+                # predicted lateness: only sheds when there is actual backlog.
+                # An idle scheduler must admit even with a pessimistic EWMA —
+                # the step EWMA is only updated by live decode waves, so an
+                # idle system that shed on stale evidence (e.g. warmup steps
+                # that paid compiles) would never run a step to correct it
+                # and would shed every request forever.
+                self.queue.shed_deadline += 1
+                self._record_outcome(req.rid, "shed_deadline",
+                                     detail="predicted TTFT over deadline")
+                return False
+        if not self.queue.submit(req):
+            self._record_outcome(req.rid, "shed_queue", detail="queue_full")
+            return False
+        return True
+
+    def _queue_ahead(self) -> int:
+        """Requests a new admission would wait behind: queue depth plus
+        itself, minus slots free on healthy groups right now."""
+        free = sum(1 for g in self.groups if g.healthy
+                   for s in g.slot_ids if self.slots[s].free)
+        return max(len(self.queue) + 1 - free, 0)
+
+    def _predicted_ttft_s(self, req: Request) -> float:
+        """EWMA estimate of ``req``'s TTFT were it admitted now: time it
+        has already waited, the queue draining ahead of it (one retirement
+        frees one slot), and its own prefill span.  Zero-initialised EWMAs
+        make this start permissive — shedding is LOAD-based and needs
+        observed evidence, unlike the structural never-fits screen."""
+        ahead = self._queue_ahead()
+        if self.paged:
+            n_chunks = -(-max(len(req.tokens), 1) // self.engine.chunk_len)
+        else:
+            n_chunks = 1
+        return ((self.clock() - req.arrival_s)
+                + ahead * self._ewma_retire_s
+                + (n_chunks + 1) * self._ewma_step_s)
+
+    def _record_outcome(self, rid: int, outcome: str,
+                        detail: str = "") -> None:
+        """Record a request's terminal outcome — exactly once.  A second
+        recording raises: the chaos soak's no-request-left-behind guarantee
+        is enforced structurally, not asserted after the fact."""
+        if outcome not in TERMINAL_OUTCOMES:
+            raise ValueError(f"unknown outcome {outcome!r} (want one of "
+                             f"{TERMINAL_OUTCOMES})")
+        prev = self.outcomes.get(rid)
+        if prev is not None:
+            raise RuntimeError(
+                f"request {rid} reached a second terminal outcome "
+                f"{outcome!r} after {prev.outcome!r}")
+        self.outcomes[rid] = RequestOutcome(rid=rid, outcome=outcome,
+                                            finish_s=self.clock(),
+                                            detail=detail)
+
+    def _terminate(self, req: Request, outcome: str,
+                   detail: str = "") -> None:
+        """Terminal path for a request that will never run again (expired /
+        failed / shed after suspension): drop its resume state — host and
+        durable — and its tracker job, bump the matching counter, record
+        the outcome."""
+        self._suspended.pop(req.rid, None)
+        if self.tracker is not None:
+            self.tracker.abandon(req.rid)
+        if outcome == "expired":
+            self.n_expired += 1
+        elif outcome == "failed":
+            self.n_failed += 1
+        elif outcome == "shed_deadline":
+            self.queue.shed_deadline += 1
+        self._record_outcome(req.rid, outcome, detail=detail)
 
     def _fits(self, req: Request) -> bool:
         """Can this request ever be placed.  Dense: a prompt bucket exists
@@ -1078,7 +1288,10 @@ class ServeScheduler:
         model's placement at device-group granularity); its shared-prefix
         hit, page allocation and eventual slot all come from THAT group, so
         page ownership never crosses a group boundary."""
-        free_by_gid = {g.gid: [s for s in g.slot_ids if self.slots[s].free]
+        # unhealthy groups are quarantined out of admission entirely: their
+        # free slots don't exist until a probe rejoins them
+        free_by_gid = {g.gid: ([s for s in g.slot_ids if self.slots[s].free]
+                               if g.healthy else [])
                        for g in self.groups}
         all_free = [s for ss in free_by_gid.values() for s in ss]
         # wave entries: (req, group, reserved slot, pages, shared, stream)
@@ -1086,7 +1299,11 @@ class ServeScheduler:
         while any(free_by_gid.values()) and len(self.queue):
             req = self.queue.pop()
             if not self._fits(req):      # raw queue.submit bypassed admission
-                self.queue.n_rejected += 1
+                self.queue.shed_never_fits += 1
+                self._record_outcome(req.rid, "shed_queue",
+                                     detail="never_fits")
+                continue
+            if self._deadline_drop_queued(req):
                 continue
             if not self.paged:
                 g = self.groups[0]
@@ -1126,9 +1343,13 @@ class ServeScheduler:
                 if shared:
                     g.allocator.share(shared)
                 need = need_total - len(shared)
+                # deadline guard: a resume that cannot meet its own total
+                # deadline anyway may not displace an on-track runner —
+                # trading a request that will count for one that won't
                 victim = self._choose_victim(
                     g, shortfall=need + self.admit_watermark
-                    - g.allocator.n_free)
+                    - g.allocator.n_free,
+                    spare_on_track=self._hopeless(req))
                 if victim is not None:
                     self._preempt(victim)
                     pages = self._admit_pages(g, need)
@@ -1160,6 +1381,61 @@ class ServeScheduler:
             else:
                 self._insert(req, slot)
 
+    # -- deadlines (DESIGN.md §14) ---------------------------------------------
+    def _deadline_drop_queued(self, req: Request) -> bool:
+        """Deadline screen for a POPPED queue entry, moments before pages
+        are charged for it: a request whose total deadline passed while it
+        waited expires; a FRESH request (no retained first token — a
+        resume's TTFT is already history) whose TTFT deadline passed is
+        shed.  Returns True when the request was dropped."""
+        if not self.enforce_deadlines:
+            return False
+        now = self.clock()
+        waited = now - req.arrival_s
+        if (req.total_deadline_s is not None
+                and waited > req.total_deadline_s):
+            self._terminate(req, "expired",
+                            detail="total deadline passed in queue")
+            return True
+        if (req.ttft_deadline_s is not None
+                and req.rid not in self._suspended
+                and waited > req.ttft_deadline_s):
+            self._terminate(req, "shed_deadline",
+                            detail="TTFT deadline passed in queue")
+            return True
+        return False
+
+    def _deadline_class(self, st: SlotState, now: float) -> int:
+        """Victim-priority class of a RUNNING slot: 0 — hopeless (its total
+        deadline cannot be met even undisturbed, at the current step EWMA),
+        1 — no deadline declared, 2 — on track.  Victim selection takes
+        hopeless requests first and on-track ones last: evicting work that
+        will count to admit work that won't is the inversion deadline-aware
+        preemption exists to prevent."""
+        req = st.request
+        # getattr: victim-policy tests fake requests with bare objects
+        deadline = getattr(req, "total_deadline_s", None)
+        if not self.enforce_deadlines or req is None or deadline is None:
+            return 1
+        eta = now + max(st.budget, 0) * self._ewma_step_s
+        return 0 if eta > req.arrival_s + deadline else 2
+
+    def _hopeless(self, req: Request) -> bool:
+        """Can this QUEUED request no longer meet its total deadline even
+        if admitted immediately and never disturbed (EWMA estimate)?"""
+        if not self.enforce_deadlines or req.total_deadline_s is None:
+            return False
+        done = (len(self._suspended[req.rid].tokens)
+                if req.rid in self._suspended else 0)
+        if self.paged:
+            n_chunks = -(-max(len(req.tokens) + max(done - 1, 0), 1)
+                         // self.engine.chunk_len)
+        else:
+            n_chunks = 1
+        eta = (self.clock()
+               + (n_chunks + req.max_new - done) * self._ewma_step_s)
+        return eta > req.arrival_s + req.total_deadline_s
+
     # -- reserve-on-demand: preemption -----------------------------------------
     def _floor_ok(self, st: SlotState) -> bool:
         """Resume-progress floor: a resumed request is not a preemption
@@ -1167,16 +1443,20 @@ class ServeScheduler:
         return (st.resume_base == 0
                 or len(st.tokens) - st.resume_base >= self.resume_floor)
 
-    def _choose_victim(self, g: DeviceGroup, *,
-                       shortfall: int = 1) -> SlotState | None:
+    def _choose_victim(self, g: DeviceGroup, *, shortfall: int = 1,
+                       spare_on_track: bool = False) -> SlotState | None:
         """Pick the lowest-priority running slot of GROUP ``g`` to preempt,
         or None — a victim's pages only help an allocation from the same
         group's pool.
 
         Candidates are live decoding slots (mid-prefill slots hold work
-        nothing has been sampled from yet).  Policy ``fewest``: fewest
-        generated tokens — the cheapest recompute — with LIFO (latest
-        admitted) as the tiebreak; ``lifo``: latest admitted outright.
+        nothing has been sampled from yet).  Deadline class ranks first —
+        hopeless requests (total deadline unmeetable) are preempted before
+        deadline-free ones, and on-track ones last (``spare_on_track``
+        excludes them outright: set when the beneficiary itself cannot meet
+        its deadline).  Within a class, policy ``fewest``: fewest generated
+        tokens — the cheapest recompute — with LIFO (latest admitted) as
+        the tiebreak; ``lifo``: latest admitted outright.
         Guards: the victim's pages must actually cover ``shortfall`` (the
         pages still missing after the free pool — preempting someone and
         STILL failing the allocation is pure thrash), and the victim must
@@ -1184,15 +1464,20 @@ class ServeScheduler:
         caller that cannot proceed without a page self-preempts
         (``_ensure_decode_pages``) — the one case that overrides the
         floor, since the alternative is a write into an unowned page."""
+        now = self.clock()
         cands = [s for s in (self.slots[i] for i in g.slot_ids)
                  if s.request is not None and not s.prefilling
                  and not s.finished and self._floor_ok(s)
                  and self._n_exclusive(s) >= shortfall]
+        if spare_on_track:
+            cands = [s for s in cands if self._deadline_class(s, now) < 2]
         if not cands:
             return None
         if self.preempt_policy == "lifo":
-            return max(cands, key=lambda s: s.admit_seq)
-        return min(cands, key=lambda s: (len(s.tokens), -s.admit_seq))
+            return min(cands, key=lambda s: (self._deadline_class(s, now),
+                                             -s.admit_seq))
+        return min(cands, key=lambda s: (self._deadline_class(s, now),
+                                         len(s.tokens), -s.admit_seq))
 
     def _n_exclusive(self, st: SlotState) -> int:
         """Pages preempting this slot would actually return to the free
@@ -1216,6 +1501,13 @@ class ServeScheduler:
             self.tracker.persist_suspended(st.request.rid, sus.tokens,
                                            sus.token_s, sus.n_preempts)
 
+    def _clear_slot(self, st: SlotState) -> None:
+        """Reset a slot's host-side bookkeeping to free (pages must already
+        be released)."""
+        st.request, st.finished = None, False
+        st.tokens, st.token_s, st.pending_chunks = [], [], []
+        st.resume, st.resume_base, st.prefill_tokens = None, 0, None
+
     def _preempt(self, st: SlotState) -> None:
         """Reclaim the slot's pages: retain the generated tokens host-side,
         free the pages (the slot parks on the trash page) and put the
@@ -1227,10 +1519,47 @@ class ServeScheduler:
         if self.tracker is not None:
             self.tracker.preempt(req)
         self._release_slot(st)
-        st.request, st.finished = None, False
-        st.tokens, st.token_s, st.pending_chunks = [], [], []
-        st.resume, st.resume_base, st.prefill_tokens = None, 0, None
+        self._clear_slot(st)
         self.queue.push_front(req)
+
+    def _evict_request(self, st: SlotState, *,
+                       count_restart: bool = False) -> int | None:
+        """Fault-path eviction — the shared tail of ``fail_slot``, a step
+        watchdog trip and group failover.  The slot's device state is
+        gone/untrusted; its request goes back through recovery: under
+        reserve-on-demand a decoding slot's generated tokens suspend
+        (recompute-on-resume keeps TTFT and tokens), a slot evicted
+        mid-resume puts its retained record back, anything else re-queues
+        from scratch.  ``count_restart`` charges the per-request restart
+        budget: a request evicted more than ``max_restarts`` times ends
+        ``failed`` instead of re-queued (a poison request cannot cycle
+        through fault recovery forever).  Returns the rid, or None for a
+        free slot."""
+        req = st.request
+        if req is None:
+            return None
+        if self.demand and st.tokens and not st.prefilling \
+                and not st.finished:
+            self._suspend(st)
+        elif self.demand and st.resume is not None:
+            # evicted mid-resume-prefill: the retained tokens are still the
+            # suspended record — put it back for the next resume attempt
+            self._suspended[req.rid] = st.resume
+            if self.tracker is not None:
+                self.tracker.persist_suspended(
+                    req.rid, st.resume.tokens, st.resume.token_s,
+                    st.resume.n_preempts)
+        self._release_slot(st)
+        self._clear_slot(st)
+        if count_restart and self.max_restarts is not None:
+            self._restarts[req.rid] = self._restarts.get(req.rid, 0) + 1
+            if self._restarts[req.rid] > self.max_restarts:
+                self._terminate(req, "failed",
+                                detail=f"restart budget "
+                                       f"{self.max_restarts} exhausted")
+                return req.rid
+        self.queue.push_front(req)
+        return req.rid
 
     def _ensure_decode_pages(self, live: list[SlotState]) -> list[SlotState]:
         """Reserve-on-demand: before the decode step, make sure every live
@@ -1299,6 +1628,15 @@ class ServeScheduler:
             self.engine.free_slot(st.slot)
             st.page_ids = []
 
+    def _deadlines_met(self, req: Request, res: RequestResult) -> bool:
+        """Did the request meet every deadline it declared — the goodput
+        criterion (no deadline declared counts as met)."""
+        if (req.ttft_deadline_s is not None
+                and res.ttft_s > req.ttft_deadline_s):
+            return False
+        return (req.total_deadline_s is None
+                or res.finish_s - req.arrival_s <= req.total_deadline_s)
+
     def _retire_finished(self) -> None:
         now = self.clock()
         for st in self.slots:
@@ -1310,13 +1648,36 @@ class ServeScheduler:
                                 arrival_s=req.arrival_s,
                                 token_s=list(st.token_s), finish_s=now)
             self.results.append(res)
+            self._record_outcome(req.rid, "completed")
+            if self._deadlines_met(req, res):
+                self.goodput_tokens += res.n_generated
+            if self._last_retire_s is not None:
+                dt = now - self._last_retire_s
+                self._ewma_retire_s = (
+                    dt if self._ewma_retire_s == 0.0
+                    else 0.7 * self._ewma_retire_s + 0.3 * dt)
+            self._last_retire_s = now
             if self.tracker is not None:
                 self.tracker.finish(req, st.slot, np.asarray(st.tokens))
                 self.tracker.retire(req)
             self._release_slot(st)
-            st.request = None
-            st.finished = False
-            st.resume, st.resume_base, st.prefill_tokens = None, 0, None
+            self._clear_slot(st)
+
+    def _expire_running(self) -> None:
+        """Retire in-flight requests whose TOTAL deadline has passed: the
+        slot frees immediately (its remaining decode steps would be pure
+        waste — the client stopped listening), partial work is discarded
+        and the ``expired`` outcome recorded."""
+        now = self.clock()
+        for st in self.slots:
+            req = st.request
+            if (req is None or req.total_deadline_s is None
+                    or now - req.arrival_s <= req.total_deadline_s):
+                continue
+            self._release_slot(st)
+            self._clear_slot(st)
+            self._terminate(req, "expired",
+                            detail="total deadline passed mid-flight")
 
     def fail_slot(self, slot: int) -> int | None:
         """Simulate losing a slot's device-local KV (worker failure).  Under
@@ -1326,27 +1687,128 @@ class ServeScheduler:
         resume machinery — the request recomputes prompt + retained tokens
         instead of regenerating from scratch.  Returns the rid."""
         st = self.slots[slot]
-        req, rid = st.request, (st.request.rid if st.request else None)
         if self.tracker is not None:
-            self.tracker.fail(slot, rid=rid)
-        if (self.demand and req is not None and st.tokens
-                and not st.prefilling and not st.finished):
-            self._suspend(st)
-        elif self.demand and req is not None and st.resume is not None:
-            # failed mid-resume-prefill: the retained tokens are still the
-            # suspended record — put it back for the next resume attempt
-            self._suspended[req.rid] = st.resume
+            self.tracker.fail(slot, rid=st.request.rid if st.request
+                              else None)
+        return self._evict_request(st, count_restart=True)
+
+    # -- group failover (DESIGN.md §14) ----------------------------------------
+    def fail_group(self, gid: int, *, reason: str = "injected") -> int:
+        """Mark device group ``gid`` unhealthy and quarantine it: every
+        in-flight request on its slots is evicted back through the recovery
+        path (the next admission wave re-routes them to healthy groups —
+        page ownership still never crosses a group boundary, the request
+        simply re-prefills from the new group's pool), its prefix cache is
+        flushed (KV resident on a failed device is untrusted), any
+        chaos-held pages are released, and the allocator is leak-checked:
+        a quarantined group must own ZERO outstanding pages.  Returns the
+        number of evicted requests.  The group rejoins via
+        :meth:`probe_group`, attempted automatically every
+        ``probe_interval_steps`` scheduler calls."""
+        g = self.groups[gid]
+        if not g.healthy:
+            return 0
+        g.healthy = False
+        g.down_step = self.step_calls
+        n = 0
+        for slot in g.slot_ids:
+            st = self.slots[slot]
+            if st.request is None:
+                continue
             if self.tracker is not None:
-                self.tracker.persist_suspended(
-                    req.rid, st.resume.tokens, st.resume.token_s,
-                    st.resume.n_preempts)
-        self._release_slot(st)
-        if req is not None:
-            st.request, st.finished = None, False
-            st.tokens, st.token_s, st.pending_chunks = [], [], []
-            st.resume, st.resume_base, st.prefill_tokens = None, 0, None
-            self.queue.push_front(req)
-        return rid
+                self.tracker.fail(slot, rid=st.request.rid)
+            self._evict_request(st, count_restart=True)
+            n += 1
+        if g.prefix is not None:
+            g.prefix.flush(g.allocator)
+        if self.chaos is not None:
+            self.chaos.release_pages(self, gid=gid)
+        if g.allocator is not None and g.allocator.n_outstanding:
+            raise RuntimeError(
+                f"group {gid} failed ({reason}) with "
+                f"{g.allocator.n_outstanding} pages still outstanding — "
+                f"quarantine leak")
+        self.n_group_failovers += 1
+        return n
+
+    def probe_group(self, gid: int) -> bool:
+        """Health probe for an unhealthy group: the chaos gate (is the
+        injected fault still active?), a real device round-trip through the
+        engine, and the quarantine invariant (allocator fully drained).  On
+        success the group rejoins admission with its trip counter cleared;
+        on failure the probe interval re-arms."""
+        g = self.groups[gid]
+        if g.healthy:
+            return True
+        if ((self.chaos is not None
+             and not self.chaos.group_healthy(self, gid))
+                or not self.engine.probe_device()):
+            g.down_step = self.step_calls
+            return False
+        if g.allocator is not None and g.allocator.n_outstanding:
+            raise RuntimeError(
+                f"group {gid} cannot rejoin: {g.allocator.n_outstanding} "
+                f"pages leaked while quarantined")
+        g.healthy = True
+        g.watchdog_trips = 0
+        self.n_group_rejoins += 1
+        return True
+
+    def _probe_groups(self) -> None:
+        for g in self.groups:
+            if (not g.healthy and self.step_calls - g.down_step
+                    >= self.probe_interval_steps):
+                self.probe_group(g.gid)
+
+    # -- step watchdog (DESIGN.md §14) -----------------------------------------
+    def _chaos_extra_s(self, gid: int) -> float:
+        """Injected slow-step seconds for this group — added to the
+        MEASURED step duration, not slept, so chaos soaks stay fast and the
+        watchdog sees exactly what a wedged device would show it."""
+        return (self.chaos.step_extra_s(self, gid)
+                if self.chaos is not None else 0.0)
+
+    def _watch_prefill(self, st: SlotState, dt: float) -> None:
+        """Wall-clock budget around one prefill chunk: an over-budget slot
+        is evicted back through the recovery path (the chunk may be wedged
+        — its work is recomputed elsewhere) and its group moves toward
+        unhealthy."""
+        if self.watchdog_budget_s is None or st.request is None:
+            return
+        g = self._slot_group[st.slot]
+        if dt + self._chaos_extra_s(g.gid) <= self.watchdog_budget_s:
+            return
+        self.watchdog_trips += 1
+        g.watchdog_trips += 1
+        self._evict_request(st, count_restart=True)
+        if g.healthy and g.watchdog_trips >= self.unhealthy_after:
+            self.fail_group(g.gid, reason="watchdog")
+
+    def _watch_decode(self, live: list[SlotState], dt: float) -> None:
+        """Wall-clock budget around the decode wave.  One decode call spans
+        the whole batch, so finer attribution than per-group is impossible:
+        every group with live slots in an over-budget wave takes a trip and
+        evicts its least-progressed live slot (the cheapest recompute —
+        possibly the wedged one; repeat offenders drive the group to
+        unhealthy either way)."""
+        if self.watchdog_budget_s is None:
+            return
+        for g in self.groups:
+            mine = [s for s in live if s.slot in g.slot_ids]
+            if not mine:
+                continue
+            if dt + self._chaos_extra_s(g.gid) <= self.watchdog_budget_s:
+                continue
+            self.watchdog_trips += 1
+            g.watchdog_trips += 1
+            victim = min((s for s in mine if s.request is not None
+                          and not s.finished),
+                         key=lambda s: (len(s.tokens), -s.admit_seq),
+                         default=None)
+            if victim is not None:
+                self._evict_request(victim, count_restart=True)
+            if g.healthy and g.watchdog_trips >= self.unhealthy_after:
+                self.fail_group(g.gid, reason="watchdog")
 
     # -- the loop --------------------------------------------------------------
     def step(self) -> bool:
@@ -1359,11 +1821,19 @@ class ServeScheduler:
         but the live batch keeps emitting tokens throughout instead of
         stalling for the whole prompt (the utilisation loss the paper's
         overlapping-segments design warns about)."""
+        self.step_calls += 1
+        if self.chaos is not None:
+            self.chaos.on_step(self)
+        self._probe_groups()
         self._fill_free_slots()
         for st in self.slots:
             if st.prefilling:
+                t0 = self.clock()
                 self._advance_prefill(st)
+                self._watch_prefill(st, self.clock() - t0)
         self._retire_finished()          # budget-1 requests end at prefill
+        if self.enforce_deadlines:
+            self._expire_running()
         live = [s for s in self.slots
                 if s.request is not None and not s.prefilling]
         if self.demand and live:
@@ -1389,6 +1859,9 @@ class ServeScheduler:
         now = self.clock()
         self.n_steps += 1
         self.occupied_slot_steps += len(live) + len(prefilling)
+        self._ewma_step_s = (now - t0 if self._ewma_step_s == 0.0
+                             else 0.7 * self._ewma_step_s
+                             + 0.3 * (now - t0))
         if self.tracker is not None:
             self.tracker.observe(now - t0, len(live))
         busy = {s.slot for s in live} | {s.slot for s in prefilling}
@@ -1408,6 +1881,10 @@ class ServeScheduler:
             if st.budget <= 0 or (self.sp.stop_token >= 0
                                   and tok == self.sp.stop_token):
                 st.finished = True
+        # watchdog AFTER token bookkeeping: an evicted slot's suspended
+        # record then includes this wave's token, so resume recomputes the
+        # exact state and the output still bit-matches
+        self._watch_decode(live, now - t0)
         self._retire_finished()
         return True
 
@@ -1427,10 +1904,7 @@ class ServeScheduler:
             while pending and pending[0].arrival_s <= now:
                 req = pending.popleft()
                 req.arrival_s += t0      # rebase onto the scheduler clock
-                if self._fits(req):      # same admission as submit()
-                    self.queue.submit(req)
-                else:
-                    self.queue.n_rejected += 1
+                self._admit(req)         # same admission as submit()
             if not self.step():
                 if pending:
                     time.sleep(min(max(pending[0].arrival_s - now, 0.0),
@@ -1455,7 +1929,7 @@ class ServeScheduler:
         self.n_steps = 0
         self.occupied_slot_steps = 0
         self.queue.n_submitted = 0
-        self.queue.n_rejected = 0
+        self.queue.reset_shed()
         self.n_preempted = 0
         self.n_admit_deferred = 0
         self.resume_tokens_recomputed = 0
@@ -1464,9 +1938,21 @@ class ServeScheduler:
         self.pages_shared = 0
         self.n_cow_copies = 0
         self.n_cache_insert_deferred = 0
+        self.outcomes = {}
+        self._restarts = {}
+        self.watchdog_trips = 0
+        self.n_expired = 0
+        self.n_failed = 0
+        self.n_group_failovers = 0
+        self.n_group_rejoins = 0
+        self.goodput_tokens = 0
+        self._last_retire_s = None
+        # _ewma_step_s / _ewma_retire_s survive, like the group EWMAs —
+        # they are calibration, not run metrics
         for g in self.groups:
             g.occupied_slot_steps = 0     # EWMA step time survives — it is
             #                               calibration, not a run metric
+            g.watchdog_trips = 0
 
     def flush_prefix_cache(self) -> int:
         """Drop every prefix-cache entry in every group, releasing the

@@ -88,6 +88,33 @@ def test_schema_drift_row_without_median_regresses(tmp_path, capsys):
     assert compare.main([base, extra]) == 0
 
 
+def test_robustness_extras_informational_never_gate(tmp_path, capsys):
+    """Goodput/shed-counter extras on a row (serve_overload) are printed as
+    informational deltas but never counted: the counters describe how much
+    of an overload trace was shed, not how fast a kernel ran — and a
+    baseline that predates the extras must not read as schema drift."""
+    base = _bench(tmp_path / "a.json",
+                  [_row("serve_overload", 1e-3, goodput_tok_per_s=100.0,
+                        shed_deadline=4)])
+    new = _bench(tmp_path / "b.json",
+                 [_row("serve_overload", 1e-3, goodput_tok_per_s=10.0,
+                       shed_deadline=40, watchdog_trips=3)])
+    assert compare.main([base, new, "--threshold", "10"]) == 0
+    out = capsys.readouterr().out
+    assert "goodput_tok_per_s 100 -> 10" in out
+    assert "shed_deadline 4 -> 40" in out
+    assert "watchdog_trips=3 (new extra, informational)" in out
+    assert "REGRESSION" not in out
+    # an old baseline without any extras compares clean against a new file
+    # that has them — and median_s still gates regardless of extras
+    plain = _bench(tmp_path / "c.json", [_row("serve_overload", 1e-3)])
+    assert compare.main([plain, new, "--threshold", "10"]) == 0
+    slow = _bench(tmp_path / "d.json",
+                  [_row("serve_overload", 5e-3, goodput_tok_per_s=500.0)])
+    assert compare.main([base, slow, "--threshold", "10"]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
 def test_mesh_change_noted_never_regresses(tmp_path, capsys):
     """A row re-measured on a different device mesh moved because the run's
     shape changed, not because code got slower — the differ must note the

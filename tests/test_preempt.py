@@ -488,3 +488,58 @@ def test_master_restart_restores_suspended_from_store(qwen, tmp_path):
         assert sched_b.tracker.restore_suspended() == {}
     finally:
         store_b.close()
+
+
+def test_restore_suspended_across_device_groups(qwen, tmp_path):
+    """Master restart with ``device_groups=2`` (DESIGN.md §13 + §14): the
+    suspended record restores, and with the request's ORIGINAL group
+    quarantined on the restarted master the resume re-places onto the
+    healthy group — page ownership never crosses a group boundary, KV
+    recomputes from the new group's pool, and the output still
+    bit-matches."""
+    from repro.core.store import JobStore
+
+    cfg, params = qwen
+    rng = np.random.default_rng(31)
+    prompt = _prompt(rng, cfg, 11)
+    [ref] = _reference_tokens(cfg, params, [prompt], max_new=8)
+
+    def make(store_path):
+        jobstore = JobStore(store_path)
+        tracker = HyParRequestTracker(4, jobstore=jobstore)
+        eng = PagedEngine(cfg, params, batch=4, max_len=64, page_size=8,
+                          prefill_chunk=16)
+        return jobstore, ServeScheduler(eng, reserve="demand",
+                                        tracker=tracker, device_groups=2)
+
+    path = tmp_path / "serve.sqlite"
+    store_a, sched_a = make(path)
+    rid_a = sched_a.submit(prompt, max_new=8)
+    for _ in range(4):
+        assert sched_a.step()
+    st = next(s for s in sched_a.slots if s.request is not None)
+    gid_a = sched_a._slot_group[st.slot].gid
+    n_retained = len(st.tokens)
+    assert n_retained >= 2
+    assert sched_a.fail_slot(st.slot) == rid_a
+    store_a.close()                            # "master dies" here
+
+    store_b, sched_b = make(path)
+    try:
+        assert sched_b.restore_suspended() == 1
+        sched_b.fail_group(gid_a, reason="device lost across restart")
+        rid_b = sched_b.submit(prompt, max_new=8)
+        assert rid_b == rid_a                  # rids reproduce from zero
+        results = sched_b.run()
+        assert [r.rid for r in results] == [rid_b]
+        assert results[0].tokens == ref
+        assert sched_b.outcomes[rid_b].outcome == "completed"
+        assert sched_b.resume_tokens_recomputed >= \
+            len(prompt) + n_retained - 1
+        # it ran (and only ran) on the surviving group's slots and pages
+        assert sched_b.groups[1 - gid_a].occupied_slot_steps > 0
+        assert sched_b.groups[gid_a].occupied_slot_steps == 0
+        for g in sched_b.groups:
+            assert g.allocator.n_outstanding == 0
+    finally:
+        store_b.close()

@@ -1,0 +1,465 @@
+"""Serve-layer robustness (DESIGN.md §14): deadlines, overload shedding,
+the step watchdog, device-group failover and the chaos soak.
+
+Deterministic tier-1 tests drive each mechanism alone through a
+``ServeChaosInjector`` (faults are injected into MEASUREMENTS and plans,
+never slept or raced — the tests are fast and exactly reproducible), then a
+composed smoke run staggers a group kill, a slow-step window and allocator
+pressure through one drain.
+
+``test_chaos_soak`` is the tier-2 lane's randomised version: hypothesis
+draws a trace and a chaos plan, structural invariants are checked after
+EVERY step (the test_serve_properties checks, extended with chaos-held
+pages), and at drain the no-request-left-behind contract is asserted:
+
+* every submitted request reached EXACTLY ONE typed terminal outcome
+  (``completed | shed_queue | shed_deadline | expired | failed``) — the
+  exactly-once half is structural (``_record_outcome`` raises on a second
+  recording), the soak asserts the coverage half,
+* a request has a result iff its outcome is ``completed``, and every
+  completed request's tokens BIT-MATCH its uninterrupted single-request
+  run (greedy decoding makes recovery observable-or-absent, never
+  approximate),
+* every group's allocator drains to zero outstanding pages — kills,
+  watchdog evictions and injected pressure leak nothing.
+
+The example budget rises in CI tier-2 via ``SERVE_CHAOS_EXAMPLES``.
+"""
+import dataclasses
+import functools
+import os
+
+import jax
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_smoke_config
+from repro.core.fault import ServeChaosInjector
+from repro.models.transformer import init_params
+from repro.serve import TERMINAL_OUTCOMES, PagedEngine, ServeScheduler
+
+MAX_EXAMPLES = int(os.environ.get("SERVE_CHAOS_EXAMPLES", "6"))
+ARCH = "qwen2-1.5b"
+BATCH, MAX_LEN, PAGE, CHUNK = 4, 64, 8, 16
+MAX_POOL = 1 + BATCH * (MAX_LEN // PAGE)
+MIN_POOL = 1 + 6                 # largest request's worst-case resume span
+PROMPT_LENS = (5, 11, 19, 30)    # 30 > CHUNK => multi-chunk prefill
+STEP_CAP = 1500
+
+
+class FakeClock:
+    """Manually advanced scheduler clock — deadline tests move time by
+    assignment instead of sleeping."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@functools.lru_cache(maxsize=None)
+def _model():
+    cfg = dataclasses.replace(get_smoke_config(ARCH),
+                              compute_dtype="float32")
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+@functools.lru_cache(maxsize=None)
+def _prompts(share=False):
+    cfg, _ = _model()
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size - 1, (n,)).astype(np.int32)
+               for n in PROMPT_LENS]
+    if share:
+        prefix = rng.integers(0, cfg.vocab_size - 1,
+                              (2 * PAGE,)).astype(np.int32)
+        prompts = [np.concatenate([prefix, p[len(prefix):]])
+                   if len(p) > len(prefix) else p for p in prompts]
+    return tuple(prompts)
+
+
+@functools.lru_cache(maxsize=None)
+def _engine():
+    cfg, params = _model()
+    return PagedEngine(cfg, params, batch=BATCH, max_len=MAX_LEN,
+                       page_size=PAGE, prefill_chunk=CHUNK)
+
+
+@functools.lru_cache(maxsize=None)
+def _ref_engine():
+    cfg, params = _model()
+    return PagedEngine(cfg, params, batch=1, max_len=MAX_LEN,
+                       page_size=PAGE, prefill_chunk=CHUNK)
+
+
+@functools.lru_cache(maxsize=None)
+def _reference(prompt_idx, max_new, share=False):
+    """Fault-free, sharing-free single-request oracle."""
+    sched = ServeScheduler(_ref_engine())
+    sched.submit(_prompts(share)[prompt_idx], max_new=max_new)
+    [res] = sched.run()
+    return tuple(res.tokens)
+
+
+def _sched(**kw):
+    eng = _engine()
+    # shared engine across tests: park every row so a previous failure
+    # cannot cascade (same hygiene as test_serve_properties)
+    eng.page_table[:] = 0
+    eng._pt_device = None
+    return ServeScheduler(eng, **kw)
+
+
+def _drain(sched, chaos=None, check=None):
+    steps = 0
+    while sched.step() or len(sched.queue):
+        if check is not None:
+            check(sched, chaos)
+        steps += 1
+        assert steps < STEP_CAP, "drain did not finish"
+    # recovery tail: the last completion may land in the same wave as a
+    # watchdog trip, ending the drain with a group still quarantined.
+    # Idle step() calls keep the probe clock advancing; every finite chaos
+    # plan lifts, so health must return within a bounded number of calls.
+    extra = 0
+    while not all(g.healthy for g in sched.groups):
+        sched.step()
+        extra += 1
+        assert extra < 100, "groups did not recover after drain"
+    return steps
+
+
+def _assert_no_leaks(sched, chaos=None):
+    if chaos is not None:
+        chaos.release_pages(sched)
+    sched.flush_prefix_cache()
+    for g in sched.groups:
+        assert g.allocator.n_outstanding == 0, \
+            f"group {g.gid} leaked pages"
+    assert (sched.engine.page_table == 0).all()
+    assert not sched._suspended
+
+
+def _check_invariants(sched, chaos=None):
+    """The test_serve_properties structural checks, chaos-aware: pages the
+    injector holds for its pressure plan count toward each group's
+    expected outstanding set (at refcount 1 — nothing else maps them)."""
+    from collections import Counter
+
+    eng = sched.engine
+    for g in sched.groups:
+        alloc = g.allocator
+        assert alloc.n_free + alloc.n_outstanding == \
+            alloc.num_pages - alloc.n_reserved
+        owned = [p for i in g.slot_ids for p in sched.slots[i].page_ids]
+        mapped = Counter(owned)
+        cached = g.prefix.pages() if g.prefix is not None else set()
+        held = set(chaos.held_pages(g.gid)) if chaos is not None else set()
+        for p in set(mapped) | cached | held:
+            assert g.page_lo <= p < g.page_hi, \
+                f"group {g.gid} references foreign page {p}"
+        for i in g.slot_ids:
+            s = sched.slots[i]
+            assert len(s.page_ids) == len(set(s.page_ids))
+        assert 0 not in mapped and 0 not in cached
+        assert set(mapped) | cached | held == set(alloc.outstanding)
+        for p in alloc.outstanding:
+            want = (mapped[p] + (1 if p in cached else 0)
+                    + (1 if p in held else 0))
+            assert alloc.refcount(p) == want
+            assert alloc.writable(p) == (alloc.refcount(p) == 1)
+    for s in sched.slots:
+        n = len(s.page_ids)
+        row = eng.page_table[s.slot]
+        if s.request is not None and not s.prefilling:
+            assert row[:n].tolist() == s.page_ids
+            assert (row[n:] == 0).all()
+        else:
+            assert (row == 0).all()
+
+
+def _assert_outcome_coverage(sched, n_submitted):
+    """No request left behind: every rid ever created reached exactly one
+    typed outcome, and has a result iff that outcome is ``completed``."""
+    assert sorted(sched.outcomes) == list(range(n_submitted))
+    for o in sched.outcomes.values():
+        assert o.outcome in TERMINAL_OUTCOMES
+    completed = {rid for rid, o in sched.outcomes.items()
+                 if o.outcome == "completed"}
+    by_rid = {}
+    for res in sched.results:
+        assert res.rid not in by_rid        # completed exactly once
+        by_rid[res.rid] = res
+    assert set(by_rid) == completed
+    return by_rid
+
+
+# -- deadlines -------------------------------------------------------------
+
+def test_admission_sheds_unmeetable_ttft_deadline():
+    clock = FakeClock()
+    clock.t = 100.0
+    sched = _sched(clock=clock)
+    # waited 10s in some upstream queue, first token due within 1s: even
+    # with cold (permissive) EWMAs the predicted TTFT is already blown
+    rid = sched.submit(_prompts()[0], max_new=4, arrival_s=90.0,
+                       ttft_deadline_s=1.0)
+    assert rid is None
+    assert sched.queue.shed_deadline == 1
+    [(rid0, o)] = sched.outcomes.items()
+    assert o.outcome == "shed_deadline"
+    # the same request is admitted when enforcement is off (the baseline
+    # configuration the overload bench compares against)
+    sched = _sched(clock=clock, enforce_deadlines=False)
+    rid = sched.submit(_prompts()[0], max_new=4, arrival_s=90.0,
+                       ttft_deadline_s=1.0)
+    assert rid is not None
+    [res] = sched.run()
+    assert sched.outcomes[rid].outcome == "completed"
+    # …and counted against goodput: it finished, but past its deadline
+    assert sched.goodput_tokens == 0
+    assert res.n_generated == 4
+
+
+def test_total_deadline_expires_in_queue_and_mid_flight():
+    clock = FakeClock()
+    sched = _sched(clock=clock)
+    # q: sits in the queue past its whole-answer deadline -> expired at pop
+    rid_q = sched.submit(_prompts()[0], max_new=4, total_deadline_s=5.0)
+    clock.t = 10.0
+    sched.step()
+    assert sched.outcomes[rid_q].outcome == "expired"
+    # m: placed and decoding, then the deadline passes mid-flight -> the
+    # slot frees immediately (remaining decode steps are pure waste)
+    rid_m = sched.submit(_prompts()[0], max_new=30, total_deadline_s=5.0)
+    sched.step()
+    assert any(s.request is not None for s in sched.slots)
+    clock.t = 20.0
+    sched.step()
+    assert sched.outcomes[rid_m].outcome == "expired"
+    assert all(s.request is None for s in sched.slots)
+    assert sched.n_expired == 2 and not sched.results
+    _assert_no_leaks(sched)
+
+
+def test_completed_within_deadlines_counts_toward_goodput():
+    sched = _sched()
+    rid = sched.submit(_prompts()[1], max_new=6, ttft_deadline_s=60.0,
+                       total_deadline_s=60.0)
+    [res] = sched.run()
+    assert sched.outcomes[rid].outcome == "completed"
+    assert sched.goodput_tokens == res.n_generated > 0
+
+
+# -- step watchdog ---------------------------------------------------------
+
+def test_watchdog_trip_requeues_and_output_bitmatches():
+    # steps 2..3 report +100s of measured duration — far over the 50s
+    # budget that no real CPU step approaches, so exactly the injected
+    # window trips.  unhealthy_after is out of reach: this isolates the
+    # evict-and-requeue path from failover.
+    chaos = ServeChaosInjector(slow=(2, 2, 100.0))
+    sched = _sched(reserve="demand", watchdog_budget_s=50.0,
+                   unhealthy_after=10 ** 6, chaos=chaos)
+    rids = {sched.submit(_prompts()[i], max_new=6): i for i in range(3)}
+    _drain(sched, chaos, check=_check_invariants)
+    assert sched.watchdog_trips >= 1 and chaos.n_slow_steps >= 1
+    assert all(g.healthy for g in sched.groups)
+    by_rid = _assert_outcome_coverage(sched, len(rids))
+    for rid, idx in rids.items():
+        assert tuple(by_rid[rid].tokens) == _reference(idx, 6), \
+            f"rid {rid} diverged after watchdog eviction"
+    _assert_no_leaks(sched, chaos)
+
+
+def test_repeated_trips_drive_group_unhealthy():
+    chaos = ServeChaosInjector(slow=(1, 30, 100.0))
+    sched = _sched(watchdog_budget_s=50.0, unhealthy_after=2,
+                   probe_interval_steps=3, chaos=chaos)
+    for i in range(3):
+        sched.submit(_prompts()[0], max_new=4)
+    _drain(sched, chaos)
+    assert sched.n_group_failovers >= 1
+    # the slow window ends; probes bring every group back
+    assert all(g.healthy for g in sched.groups)
+    assert sched.n_group_rejoins >= 1
+    _assert_outcome_coverage(sched, 3)
+    _assert_no_leaks(sched, chaos)
+
+
+# -- restart budget --------------------------------------------------------
+
+def test_restart_budget_fails_poison_request():
+    sched = _sched(max_restarts=0)
+    rid = sched.submit(_prompts()[0], max_new=8)
+    sched.step()
+    slot = next(s.slot for s in sched.slots if s.request is not None)
+    assert sched.fail_slot(slot) == rid
+    assert sched.outcomes[rid].outcome == "failed"
+    assert sched.n_failed == 1
+    sched.run()
+    assert not sched.results          # terminally failed, never re-queued
+    _assert_no_leaks(sched)
+
+
+def test_restart_budget_survives_within_limit():
+    sched = _sched(max_restarts=2, reserve="demand")
+    rid = sched.submit(_prompts()[2], max_new=6)
+    sched.step()
+    slot = next(s.slot for s in sched.slots if s.request is not None)
+    sched.fail_slot(slot)
+    [res] = sched.run()
+    assert sched.outcomes[rid].outcome == "completed"
+    assert tuple(res.tokens) == _reference(2, 6)
+    _assert_no_leaks(sched)
+
+
+# -- group failover --------------------------------------------------------
+
+def test_group_failover_reroutes_and_rejoins():
+    # group 1 dies at call 3 and stays dead for 6 calls: its in-flight
+    # requests re-route to group 0 (placement never crosses a page-range
+    # boundary — the request simply re-prefills from the healthy pool) and
+    # the group rejoins via the health probe once the fault lifts.
+    chaos = ServeChaosInjector(kill_group=(1, 3, 6))
+    sched = _sched(device_groups=2, reserve="demand",
+                   probe_interval_steps=2, chaos=chaos)
+    rids = {}
+    for i, (idx, max_new) in enumerate([(0, 4), (1, 6), (2, 4), (3, 6),
+                                        (0, 6), (2, 6)]):
+        rids[sched.submit(_prompts()[idx], max_new=max_new)] = (idx, max_new)
+    _drain(sched, chaos, check=_check_invariants)
+    assert chaos.n_kills == 1
+    assert sched.n_group_failovers == 1 and sched.n_group_rejoins == 1
+    assert all(g.healthy for g in sched.groups)
+    by_rid = _assert_outcome_coverage(sched, len(rids))
+    for rid, (idx, max_new) in rids.items():
+        assert tuple(by_rid[rid].tokens) == _reference(idx, max_new), \
+            f"rid {rid} diverged across group failover"
+    _assert_no_leaks(sched, chaos)
+
+
+def test_failed_group_quarantine_holds_until_probe():
+    sched = _sched(device_groups=2, probe_interval_steps=10 ** 6)
+    sched.fail_group(1, reason="test")
+    assert not sched.groups[1].healthy
+    # admission only sees group 0's slots while 1 is quarantined
+    for i in range(4):
+        sched.submit(_prompts()[0], max_new=2)
+    sched.step()
+    assert all(sched.slots[s].request is None
+               for s in sched.groups[1].slot_ids)
+    sched.run()
+    assert sched.probe_group(1)       # manual probe rejoins it
+    assert sched.groups[1].healthy and sched.n_group_rejoins == 1
+    _assert_outcome_coverage(sched, 4)
+    _assert_no_leaks(sched)
+
+
+# -- allocator pressure ----------------------------------------------------
+
+def test_chaos_pressure_is_held_then_released_leak_free():
+    chaos = ServeChaosInjector(pressure=(0, 1, 4, MAX_POOL))
+    sched = _sched(reserve="demand", pool_pages=MIN_POOL + 4, chaos=chaos)
+    rids = [sched.submit(_prompts()[i % 3], max_new=4) for i in range(4)]
+    _drain(sched, chaos, check=_check_invariants)
+    assert chaos.n_pressure_pages > 0
+    assert not chaos.held_pages(0)    # window ended -> released in-run
+    _assert_outcome_coverage(sched, len(rids))
+    _assert_no_leaks(sched, chaos)
+
+
+# -- composed smoke + the tier-2 soak --------------------------------------
+
+def test_chaos_smoke_composed():
+    """The tier-1 smoke drain: a group kill, a slow-step window and
+    allocator pressure staggered through one deterministic trace."""
+    chaos = ServeChaosInjector(kill_group=(1, 4, 6),
+                               slow=(14, 6, 100.0), slow_gid=0,
+                               pressure=(0, 2, 4, 2))
+    sched = _sched(device_groups=2, reserve="demand",
+                   watchdog_budget_s=50.0, unhealthy_after=2,
+                   probe_interval_steps=3, chaos=chaos)
+    rids = {}
+    for idx, max_new in [(0, 6), (1, 8), (2, 6), (3, 8), (0, 8), (2, 8),
+                         (1, 6), (3, 6)]:
+        rids[sched.submit(_prompts()[idx], max_new=max_new)] = (idx, max_new)
+    _drain(sched, chaos, check=_check_invariants)
+    assert chaos.n_kills == 1 and chaos.n_pressure_pages > 0
+    assert sched.n_group_failovers >= 1 and sched.n_group_rejoins >= 1
+    assert all(g.healthy for g in sched.groups)
+    by_rid = _assert_outcome_coverage(sched, len(rids))
+    assert all(o.outcome == "completed" for o in sched.outcomes.values())
+    for rid, (idx, max_new) in rids.items():
+        assert tuple(by_rid[rid].tokens) == _reference(idx, max_new), \
+            f"rid {rid} diverged under composed chaos"
+    _assert_no_leaks(sched, chaos)
+
+
+@given(reqs=st.lists(st.tuples(st.integers(0, len(PROMPT_LENS) - 1),
+                               st.sampled_from((2, 4, 6, 8))),
+                     min_size=3, max_size=7),
+       pool=st.integers(MIN_POOL, MAX_POOL),
+       demand=st.booleans(),
+       share=st.booleans(),
+       kill_after=st.sampled_from((None, 1, 2, 4, 6, 8)),
+       slow_after=st.sampled_from((None, 1, 2, 4, 6, 8)),
+       pressurize=st.booleans(),
+       ttft_deadline=st.sampled_from((None, 0.0, 60.0)))
+@settings(max_examples=MAX_EXAMPLES, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+def test_chaos_soak(reqs, pool, demand, share, kill_after, slow_after,
+                    pressurize, ttft_deadline):
+    chaos = ServeChaosInjector(
+        kill_group=(1, kill_after, 5) if kill_after is not None else None,
+        slow=(slow_after, 4, 100.0) if slow_after is not None else None,
+        pressure=(0, 2, 5, 3) if pressurize else None)
+    eng = _engine()
+    eng.page_table[:] = 0
+    eng._pt_device = None
+    sched = ServeScheduler(
+        eng, pool_pages=pool,
+        reserve="demand" if demand else "lifetime",
+        prefix_cache=share, device_groups=2,
+        watchdog_budget_s=50.0, unhealthy_after=2,
+        probe_interval_steps=3, chaos=chaos)
+    admitted = {}
+    n_submitted = 0
+    for idx, max_new in reqs:
+        rid = sched.submit(_prompts(share)[idx], max_new=max_new,
+                           ttft_deadline_s=ttft_deadline)
+        n_submitted += 1
+        if rid is not None:
+            admitted[rid] = (idx, max_new)
+
+    steps = 0
+    while sched.step() or len(sched.queue):
+        _check_invariants(sched, chaos)
+        steps += 1
+        assert steps < STEP_CAP, (
+            f"drain did not finish (reqs={reqs}, pool={pool}, "
+            f"demand={demand}, share={share}, kill={kill_after}, "
+            f"slow={slow_after}, pressure={pressurize})")
+    # recovery tail (see _drain): idle calls until every probe lands
+    extra = 0
+    while not all(g.healthy for g in sched.groups):
+        sched.step()
+        extra += 1
+        assert extra < 100, "groups did not recover after drain"
+
+    _check_invariants(sched, chaos)
+    by_rid = _assert_outcome_coverage(sched, n_submitted)
+    # tokens of everything that completed bit-match the fault-free,
+    # sharing-free oracle — kills, trips and pressure are invisible in
+    # the output or the request did not complete, never in between
+    for rid, res in by_rid.items():
+        idx, max_new = admitted[rid]
+        assert tuple(res.tokens) == _reference(idx, max_new, share), (
+            f"rid {rid} diverged (pool={pool}, demand={demand}, "
+            f"share={share}, kill={kill_after}, slow={slow_after})")
+    # a finite chaos plan always lifts: every group must be healthy again
+    assert all(g.healthy for g in sched.groups)
+    _assert_no_leaks(sched, chaos)

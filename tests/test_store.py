@@ -181,7 +181,7 @@ def test_meta_roundtrip(store):
 
 def test_gc_noop_without_limits(store):
     store.put_result("k", [np.zeros(2)])
-    assert store.gc() == {"rows": 0, "spill_files": 0}
+    assert store.gc() == {"rows": 0, "spill_files": 0, "request_rows": 0}
     assert store.state("k") == "done"
 
 
@@ -193,7 +193,7 @@ def test_gc_prunes_by_age(store):
         store._conn.execute("UPDATE jobs SET updated_at=? WHERE key='old'",
                             (now - 3600,))
     pruned = store.gc(max_age_s=60, now=now)
-    assert pruned == {"rows": 1, "spill_files": 0}
+    assert pruned == {"rows": 1, "spill_files": 0, "request_rows": 0}
     assert store.state("old") is None
     assert store.load_result("fresh") is not None
 
@@ -225,7 +225,7 @@ def test_gc_never_touches_running_rows(store):
         store._conn.execute("UPDATE jobs SET state='lost' WHERE key='lost'")
         store._conn.execute("UPDATE jobs SET updated_at=?", (now - 9999,))
     pruned = store.gc(max_age_s=0, max_rows=0, now=now)
-    assert pruned == {"rows": 0, "spill_files": 0}
+    assert pruned["rows"] == 0 and pruned["spill_files"] == 0
     assert store.state("run") == "running"
     assert store.state("pend") == "pending"
     assert store.state("lost") == "lost"
@@ -242,7 +242,7 @@ def test_gc_unlinks_spill_files(tmp_path):
                 "UPDATE jobs SET updated_at=? WHERE key='big_old'",
                 (now - 3600,))
         pruned = s.gc(max_age_s=60, now=now)
-        assert pruned == {"rows": 1, "spill_files": 1}
+        assert pruned == {"rows": 1, "spill_files": 1, "request_rows": 0}
         assert sorted(os.listdir(s.spill_dir)) == ["big_new.npz"]
         # pruning left no orphans behind for the hygiene check to flag
         assert s.check_leaks() == []
@@ -264,3 +264,27 @@ def test_gc_age_and_cap_compose(store):
     assert pruned["rows"] == 3
     assert store.state("k4") == "done" and store.state("k3") == "done"
     assert all(store.state(k) is None for k in ("k0", "k1", "k2"))
+
+
+def test_gc_prunes_stale_request_rows_exempting_live(store):
+    """Serve suspended-token rows: the serving path deletes them at retire,
+    so a row older than the cutoff is an orphan of a dead master — UNLESS a
+    live run claims it via ``exempt_requests``.  ``max_rows`` never applies
+    to requests (age is the only orphan evidence)."""
+    now = time.time()
+    for rid in ("serve.suspended:0", "serve.suspended:1", "serve.suspended:2"):
+        store.put_request(rid, {"tokens": np.array([1, 2, 3])})
+    with store._lock, store._conn:
+        store._conn.execute(
+            "UPDATE requests SET updated_at=? WHERE rid!='serve.suspended:2'",
+            (now - 3600,))
+    pruned = store.gc(max_age_s=60, now=now,
+                      exempt_requests=["serve.suspended:1"])
+    assert pruned == {"rows": 0, "spill_files": 0, "request_rows": 1}
+    assert store.get_request("serve.suspended:0") is None   # stale orphan
+    assert store.get_request("serve.suspended:1") is not None  # live-exempt
+    assert store.get_request("serve.suspended:2") is not None  # fresh
+    # a rows-only gc leaves request rows alone: no age => no orphan evidence
+    pruned = store.gc(max_rows=0, now=now)
+    assert pruned["request_rows"] == 0
+    assert store.get_request("serve.suspended:1") is not None

@@ -26,7 +26,7 @@ import sys
 #: (DESIGN.md §14) whose drift is worth seeing but must never gate
 INFO_EXTRAS = ("goodput_tok_per_s", "goodput_gain_pct", "shed_deadline",
                "shed_queue_full", "shed_never_fits", "n_expired",
-               "watchdog_trips")
+               "watchdog_trips", "speedup_vs_gather_pct")
 
 
 def extras_notes(b: dict, n: dict) -> list[str]:

@@ -23,9 +23,25 @@ import jax.numpy as jnp
 from repro.kernels import tuning
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.jacobi_sweep.ops import jacobi_sweep, jacobi_sweep_residual
+from repro.kernels.paged_attention.ops import paged_decode_attention
 from repro.kernels.rmsnorm.ops import rmsnorm
 from repro.kernels.runtime import on_tpu
 from repro.kernels.ssd_scan.ops import ssd_intra_chunk
+
+
+def _paged_inputs(key, B, H, KV, D, page_size, n_pages):
+    """Serve-shaped decode inputs: full table rows (worst-case gather
+    width), one pool page per logical page, three-quarter-full slots."""
+    ks = jax.random.split(key, 5)
+    P = 1 + B * n_pages
+    q = jax.random.normal(ks[0], (B, 1, H, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (P, KV, page_size, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (P, KV, page_size, D), jnp.float32)
+    tbl = jnp.arange(1, P, dtype=jnp.int32).reshape(B, n_pages)
+    kv_len = jnp.full((B,), (3 * n_pages * page_size) // 4, jnp.int32)
+    kt = jax.random.normal(ks[3], (B, KV, 1, D), jnp.float32)
+    vt = jax.random.normal(ks[4], (B, KV, 1, D), jnp.float32)
+    return q, kp, vp, tbl, kv_len, kt, vt
 
 
 def _time(fn, *args, iters=5, **kw):
@@ -89,6 +105,17 @@ def ref_rows(smoke: bool = False) -> list[dict]:
     s = _time(rmsnorm, x, g, impl="ref")
     rows.append(bench_row("rmsnorm_ref", (R, d), "float32", s,
                      flops=3.0 * x.size, nbytes=2.0 * x.size * 4))
+
+    B, H, KV, D, ps, npg = (4, 4, 2, 32, 8, 4) if smoke else \
+        (8, 8, 2, 64, 16, 16)
+    q, kp, vp, tbl, kv_len, kt, vt = _paged_inputs(ks[7], B, H, KV, D,
+                                                   ps, npg)
+    s = _time(paged_decode_attention, q, kp, vp, tbl, kv_len, kt, vt,
+              impl="ref")
+    T = npg * ps
+    rows.append(bench_row("paged_attention_ref", (B, H, T, D), "float32", s,
+                     flops=2.0 * 2 * B * H * T * D,
+                     nbytes=4.0 * 2 * B * T * KV * D))
 
     n = 512 if smoke else 2048
     A = jax.random.normal(ks[1], (n, n)) / n + jnp.eye(n) * 3
@@ -173,6 +200,18 @@ def autotune_rows(smoke: bool = False) -> list[dict]:
          lambda cfg: (lambda: ssd_intra_chunk(xh, dt, a, Bm, Cm, impl=impl)),
          (BC, Hs, Q, P, N), [{}], 2.0 * BC * Hs * Q * Q * (P + N),
          4.0 * (xh.size + Bm.size + Cm.size))
+
+    # paged flash-decode attention (in-kernel page gather, DESIGN.md §15)
+    B2, H2, KV2, D2, ps2, np2 = (8, 8, 2, 64, 16, 16) if tpu else \
+        (2, 4, 2, 32, 8, 4)
+    pq, pk, pv, ptbl, plen, pkt, pvt = _paged_inputs(ks[3], B2, H2, KV2,
+                                                     D2, ps2, np2)
+    T2 = np2 * ps2
+    tune("paged_attention",
+         lambda cfg: (lambda: paged_decode_attention(
+             pq, pk, pv, ptbl, plen, pkt, pvt, impl=impl, **cfg)),
+         pq.shape, tuning.DEFAULT_CANDIDATES["paged_attention"],
+         2.0 * 2 * B2 * H2 * T2 * D2, 4.0 * 2 * B2 * T2 * KV2 * D2)
     return rows
 
 

@@ -19,6 +19,11 @@ the CLI):
   vLLM-style preemption at equal pool bytes — extras ``preempt_count``,
   ``resume_tokens_recomputed`` and ``speedup_vs_lifetime_pct``
   (DESIGN.md §10).
+* the mixed trace again as ``serve_paged_kernel``: paged decode through
+  the in-kernel page gather (DESIGN.md §15, ``attn_impl="auto"``) vs the
+  materialising gather path at equal pool bytes — a tie on CPU (auto
+  resolves to gather off-TPU), the real comparison on TPU; extras
+  ``gather_tok_per_s``, ``speedup_vs_gather_pct``.
 * the **shared-prefix trace** (every prompt opens with the same system
   prefix): ``serve_prefix_cache`` compares the paged engine with prefix
   caching + copy-on-write page sharing on vs off at equal pool bytes —
@@ -81,6 +86,9 @@ class _Args:
     max_new_mix: tuple | None = None
     prefix_cache: bool = False
     shared_prefix_len: int = 0
+    # paged decode attention impl (DESIGN.md §15): auto = kernel on TPU,
+    # gather path on CPU
+    paged_attn_impl: str = "auto"
     # deadline-aware serving (DESIGN.md §14)
     ttft_deadline: float | None = None
     total_deadline: float | None = None
@@ -175,6 +183,7 @@ def _make_args(engine: str, *, batch, n_requests, max_new, prompt_lens,
                max_new_mix: tuple | None = None,
                prefix_cache: bool = False,
                shared_prefix_len: int = 0,
+               paged_attn_impl: str = "auto",
                ttft_deadline: float | None = None,
                total_deadline: float | None = None,
                enforce_deadlines: bool = True,
@@ -189,6 +198,7 @@ def _make_args(engine: str, *, batch, n_requests, max_new, prompt_lens,
                  admit_watermark=admit_watermark, max_new_mix=max_new_mix,
                  prefix_cache=prefix_cache,
                  shared_prefix_len=shared_prefix_len,
+                 paged_attn_impl=paged_attn_impl,
                  ttft_deadline=ttft_deadline, total_deadline=total_deadline,
                  enforce_deadlines=enforce_deadlines,
                  watchdog_budget=watchdog_budget, max_restarts=max_restarts)
@@ -367,6 +377,29 @@ def run(smoke: bool = False) -> list[dict]:
             * 100.0 if dense_tok_s else 0.0,
             chunk_traces=s["trace_counts"]["chunk_prefill"],
             decode_traces=s["trace_counts"]["decode"]))
+
+    # -- paged-kernel trace: in-kernel page gather (DESIGN.md §15) vs the
+    # materialising gather path, same mixed trace at EQUAL pool bytes.
+    # attn_impl="auto" resolves to the Pallas kernel on TPU and to the
+    # gather path on CPU (the interpreter cannot serve), so on CPU CI the
+    # variants tie within round-robin noise — the row exists to carry the
+    # TPU comparison and to keep the dispatch plumbing measured.
+    stats = compare_engines(
+        {"gather": _make_args("direct",
+                              **dict(paged, paged_attn_impl="ref")),
+         "kernel": _make_args("direct",
+                              **dict(paged, paged_attn_impl="auto"))},
+        cfg=cfg, params=params)
+    ga, kn = stats["gather"], stats["kernel"]
+    rows.append(_row(
+        "serve_paged_kernel", batch, mx["max_new"], kn,
+        kv_budget_tokens=kv_budget_tokens, n_slots=batch,
+        attn_impl="auto",
+        gather_tok_per_s=ga["tok_per_s"],
+        speedup_vs_gather_pct=(kn["tok_per_s"] / ga["tok_per_s"] - 1.0)
+        * 100.0 if ga["tok_per_s"] else 0.0,
+        chunk_traces=kn["trace_counts"]["chunk_prefill"],
+        decode_traces=kn["trace_counts"]["decode"]))
 
     # -- page-constrained trace: full-lifetime reservation vs
     # reserve-on-demand + preemption at EQUAL pool bytes.  The pool holds

@@ -43,7 +43,8 @@ def flash_attention(q, k, v, *, causal=True, window=None, impl="auto",
     if impl == "ref":
         return _ref_call(q, k, v, causal=causal, window=window)
     if q_block is None or kv_block is None:
-        cfg = get_tuner().lookup("flash_attention", q.shape, q.dtype) or {}
+        cfg = get_tuner().lookup("flash_attention", q.shape, q.dtype,
+                                 impl=impl) or {}
         q_block = q_block or cfg.get("q_block", DEFAULT_BLOCK)
         kv_block = kv_block or cfg.get("kv_block", DEFAULT_BLOCK)
     return _kernel_call(q, k, v, causal=causal, window=window,

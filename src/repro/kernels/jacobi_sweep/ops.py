@@ -25,9 +25,10 @@ _ref = jax.jit(jacobi_sweep_ref)
 _residual_ref = jax.jit(jacobi_sweep_residual_ref)
 
 
-def _tuned_blocks(N: int, dtype, row_block, col_block):
+def _tuned_blocks(N: int, dtype, row_block, col_block, impl=None):
     if row_block is None or col_block is None:
-        cfg = get_tuner().lookup("jacobi_sweep", (N, N), dtype) or {}
+        cfg = get_tuner().lookup("jacobi_sweep", (N, N), dtype,
+                                 impl=impl) or {}
         row_block = row_block or cfg.get("row_block", DEFAULT_BLOCK)
         col_block = col_block or cfg.get("col_block", DEFAULT_BLOCK)
     return row_block, col_block
@@ -76,7 +77,8 @@ def jacobi_sweep(A, x, b, diag, *, impl="auto", row_block=None,
     impl = resolve_impl(impl)
     if impl == "ref":
         return _ref(A, x, b, diag)
-    rb, cb = _tuned_blocks(A.shape[0], x.dtype, row_block, col_block)
+    rb, cb = _tuned_blocks(A.shape[0], x.dtype, row_block, col_block,
+                           impl=impl)
     return _sweep_call(A, x, b, diag, row_block=rb, col_block=cb,
                        interpret=(impl == "interpret"))
 
@@ -93,7 +95,8 @@ def jacobi_sweep_residual(A, x, b, diag, *, impl="auto", row_block=None,
     if impl == "ref":
         x2, rsq = _residual_ref(A, x, b, diag)
     else:
-        rb, cb = _tuned_blocks(A.shape[0], x.dtype, row_block, col_block)
+        rb, cb = _tuned_blocks(A.shape[0], x.dtype, row_block, col_block,
+                               impl=impl)
         x2, rsq = _residual_call(A, x, b, diag, row_block=rb, col_block=cb,
                                  interpret=(impl == "interpret"))
     return x2, jnp.sqrt(rsq)

@@ -1,0 +1,3 @@
+from . import ops, ref
+from .kernel import paged_attention_kernel
+from .ops import paged_decode_attention, resolve_paged_impl

@@ -1,0 +1,159 @@
+"""Paged flash-decode Pallas TPU kernel.
+
+vLLM-style paged attention (DESIGN.md §15): one query token per slot
+attends over that slot's KV pages *in place* in the shared page pool.  The
+per-slot page table and per-slot cache lengths ride in as scalar-prefetch
+operands (``pltpu.PrefetchScalarGridSpec``), so the K/V BlockSpec index
+maps resolve ``logical page j of slot b -> physical pool page
+table[b, j]`` at DMA-issue time — no dense per-slot gather is ever
+materialised (the ~4%/step copy `gather_pages` pays).
+
+Grid: (batch, kv_head_blocks, logical_pages) with the page axis innermost
+and sequential; the running max / denominator / accumulator live in VMEM
+scratch across page steps (the standard TPU flash-decode schedule).  GQA is
+native to the layout: q arrives grouped as (B, KV, G, D) so each kv-head
+block reads exactly its own pool heads.
+
+Masking contract (shared with ``models.attention.gather_pages``): physical
+page 0 is the reserved trash page — decode writes of free/mid-prefill slots
+land there, so its contents are arbitrary.  Blocks whose resolved page id
+is 0 read K/V as ZEROS (not NEG_INF): positions inside ``kv_len`` still
+contribute exp(0 - m) to the denominator, exactly like the zero-filled
+rows the gather path produces, so kernel and gather outputs match bit-for-
+token even on slots whose tables point at the trash page.  Positions at or
+past ``kv_len`` (and outside the sliding window) are masked to NEG_INF.
+
+The kernel emits the *unnormalised* accumulator plus the running (m, l)
+statistics; the ops wrapper LSE-merges the current token's own K/V (the
+delta-cache self term) outside, mirroring ``_decode_attn_plus_self`` so the
+cache write stays a pure delta.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+LANE = 128   # the (m, l) outputs broadcast over a full lane dim
+
+
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref,
+                  acc_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
+                  window: int | None, page_size: int, g_pad: int,
+                  n_pages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = len_ref[b]
+    pid = tbl_ref[b, j]
+
+    # skip pages that cannot contain a valid position: entirely at/past the
+    # slot's length, or (sliding window) entirely before the window start
+    run = j * page_size < kv_len
+    if window is not None:
+        run = jnp.logical_and(
+            run, (j + 1) * page_size - 1 >= kv_len + 1 - window)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                 # (hb, g_pad, D)
+        k = k_ref[0].astype(jnp.float32)                 # (hb, ps, D)
+        v = v_ref[0].astype(jnp.float32)
+        # trash page: read as zeros — see the masking contract above
+        k = jnp.where(pid == 0, 0.0, k)
+        v = jnp.where(pid == 0, 0.0, v)
+        s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32)
+        pos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (g_pad, page_size), 1)
+        ok = pos < kv_len
+        if window is not None:
+            ok = jnp.logical_and(ok, pos >= kv_len + 1 - window)
+        s = jnp.where(ok[None], s, NEG_INF)              # (hb, g_pad, ps)
+
+        m_prev = m_scr[...]                              # (hb, g_pad, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=2, keepdims=True)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(p, v, (((2,), (1,)), ((0,), (0,))),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + pv
+
+    @pl.when(j == n_pages - 1)
+    def _emit():
+        acc_ref[0] = acc_scr[...]
+        m_ref[0] = jnp.broadcast_to(m_scr[...], m_ref.shape[1:])
+        l_ref[0] = jnp.broadcast_to(l_scr[...], l_ref.shape[1:])
+
+
+def paged_attention_kernel(q, k_pool, v_pool, pages, kv_len, *,
+                           window: int | None = None, head_block: int = 1,
+                           interpret: bool = False):
+    """q: (B, KV, g_pad, D) pre-scaled grouped queries; k/v_pool:
+    (P, KV, page_size, D) shared pools; pages: (B, n_pages) int32 page
+    table; kv_len: (B,) int32 valid lengths (OLD lengths — the current
+    token's self term is merged outside).
+
+    Returns ``(acc, m, l)``: unnormalised f32 accumulator
+    (B, KV, g_pad, D) and running max / denominator broadcast over a LANE
+    axis, (B, KV, g_pad, LANE).
+    """
+    B, KV, g_pad, D = q.shape
+    ps = k_pool.shape[2]
+    n_pages = pages.shape[1]
+    hb = head_block
+    assert KV % hb == 0, (KV, hb)
+
+    kernel = functools.partial(
+        _paged_kernel, window=window, page_size=ps, g_pad=g_pad,
+        n_pages=n_pages)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV // hb, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, hb, g_pad, D),
+                         lambda b, kb, j, tbl, lens: (b, kb, 0, 0)),
+            # logical page j of slot b lives in physical page tbl[b, j] —
+            # the index map IS the gather
+            pl.BlockSpec((1, hb, ps, D),
+                         lambda b, kb, j, tbl, lens: (tbl[b, j], kb, 0, 0)),
+            pl.BlockSpec((1, hb, ps, D),
+                         lambda b, kb, j, tbl, lens: (tbl[b, j], kb, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, hb, g_pad, D),
+                         lambda b, kb, j, tbl, lens: (b, kb, 0, 0)),
+            pl.BlockSpec((1, hb, g_pad, LANE),
+                         lambda b, kb, j, tbl, lens: (b, kb, 0, 0)),
+            pl.BlockSpec((1, hb, g_pad, LANE),
+                         lambda b, kb, j, tbl, lens: (b, kb, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((hb, g_pad, 1), jnp.float32),   # running max
+            pltpu.VMEM((hb, g_pad, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((hb, g_pad, D), jnp.float32),   # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, g_pad, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, g_pad, LANE), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, g_pad, LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pages, kv_len, q, k_pool, v_pool)

@@ -1,0 +1,94 @@
+"""Public wrapper: paged flash-decode attention over a shared page pool.
+
+``paged_decode_attention`` is the drop-in replacement for the decode-path
+``gather_pages`` + ``_decode_attn_plus_self`` pair: same inputs the serving
+engine already holds (pool, page table, per-slot lengths, the current
+token's K/V delta), same (B, 1, H, D) output, no materialised per-slot
+view.  The kernel returns unnormalised (acc, m, l); the current token's
+self term is LSE-merged here so the delta-cache write contract of
+``models.attention`` is untouched.
+
+Impl resolution differs from :func:`runtime.resolve_impl` in ONE case:
+``auto`` off-TPU resolves to ``ref`` (the gather oracle), not interpret —
+decode runs every step of every serve trace, and the Pallas interpreter is
+orders of magnitude too slow to be a serving default.  Tests opt into
+``interpret`` explicitly so CPU CI still exercises the kernel body.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from ..runtime import IMPLS, on_tpu
+from ..tuning import get_tuner
+from .kernel import paged_attention_kernel
+from .ref import paged_decode_attention_ref
+
+DEFAULT_HEAD_BLOCK = 1
+_SUBLANE = 8   # grouped-q axis padded to the f32 sublane tile
+
+
+def resolve_paged_impl(impl: str) -> str:
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; pick from {IMPLS}")
+    if impl != "auto":
+        return impl
+    return "kernel" if on_tpu() else "ref"
+
+
+def paged_decode_attention(q, k_pool, v_pool, pages, kv_len, kt, vt, *,
+                           window: int | None = None, impl: str = "auto",
+                           head_block: int | None = None):
+    """One-token attention straight against a paged KV pool.
+
+    q: (B, 1, H, D); k/v_pool: (P, KV, page_size, D) shared pools; pages:
+    (B, n_pages) int32 per-slot page table (physical page 0 = trash, read
+    as zeros); kv_len: scalar or (B,) OLD cache lengths; kt/vt:
+    (B, KV, 1, D) current-token K/V.  Returns (B, 1, H, D), numerically
+    matching ``_decode_attn_plus_self`` over the gathered view.
+
+    ``head_block`` (kv heads per grid step) comes from the autotune cache
+    when unset — a cache-only, trace-safe lookup like the other kernels.
+    """
+    impl = resolve_paged_impl(impl)
+    if impl != "ref" and k_pool.dtype != q.dtype:
+        impl = "ref"   # f8-stored pools: the ref path casts the layer slice
+    if impl == "ref":
+        return paged_decode_attention_ref(q, k_pool, v_pool, pages, kv_len,
+                                          kt, vt, window=window)
+
+    B, _, H, D = q.shape
+    KV = k_pool.shape[1]
+    G = H // KV
+    if head_block is None:
+        cfg = get_tuner().lookup("paged_attention", q.shape, q.dtype,
+                                 impl=impl) or {}
+        head_block = cfg.get("head_block", DEFAULT_HEAD_BLOCK)
+    hb = max(1, min(int(head_block), KV))
+    while KV % hb:
+        hb -= 1
+
+    kv_len = jnp.broadcast_to(jnp.reshape(jnp.asarray(kv_len), (-1,)),
+                              (B,)).astype(jnp.int32)
+    scale = 1.0 / math.sqrt(D)
+    qf = (q.reshape(B, KV, G, D) * scale).astype(q.dtype)
+    g_pad = -(-G // _SUBLANE) * _SUBLANE
+    qp = jnp.pad(qf, ((0, 0), (0, 0), (0, g_pad - G), (0, 0)))
+    acc, m, l = paged_attention_kernel(
+        qp, k_pool, v_pool, pages.astype(jnp.int32), kv_len,
+        window=window, head_block=hb, interpret=(impl == "interpret"))
+    acc, m, l = acc[:, :, :G], m[:, :, :G, 0], l[:, :, :G, 0]
+
+    # LSE merge of the current token's self term (delta-cache contract:
+    # kt/vt are not yet in the pool) — mirrors _decode_attn_plus_self
+    s_self = jnp.einsum("bkgd,bktd->bkgt", qf, kt.astype(q.dtype),
+                        preferred_element_type=jnp.float32)[..., 0]
+    m_tot = jnp.maximum(m, s_self)
+    alpha = jnp.exp(m - m_tot)
+    beta = jnp.exp(s_self - m_tot)
+    l_tot = alpha * l + beta
+    out = alpha[..., None] * acc + beta[..., None] * vt[:, :, 0, :].astype(
+        jnp.float32)[:, :, None, :]
+    out = out / l_tot[..., None]
+    return out.reshape(B, 1, H, D).astype(q.dtype)

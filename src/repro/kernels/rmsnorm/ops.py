@@ -42,7 +42,8 @@ def rmsnorm(x, gain, *, eps=1e-6, impl="auto", row_block=None):
         out = _ref_call(x2d, gain, eps=eps)
     else:
         if row_block is None:
-            cfg = get_tuner().lookup("rmsnorm", x2d.shape, x.dtype) or {}
+            cfg = get_tuner().lookup("rmsnorm", x2d.shape, x.dtype,
+                                     impl=impl) or {}
             row_block = cfg.get("row_block", DEFAULT_ROW_BLOCK)
         out = _kernel_call(x2d, gain, eps=eps, row_block=row_block,
                            interpret=(impl == "interpret"))

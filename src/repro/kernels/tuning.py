@@ -44,6 +44,7 @@ __all__ = [
     "get_tuner",
     "shape_bucket",
     "cache_key",
+    "default_impl",
     "calibrated_cost_params",
 ]
 
@@ -59,6 +60,7 @@ DEFAULT_CANDIDATES: dict[str, list[dict[str, int]]] = {
     # the SSD kernel tiles by its (chunk, head) grid — nothing to search yet,
     # but timing it populates the cost-model bridge
     "ssd_scan": [{}],
+    "paged_attention": [{"head_block": h} for h in (1, 2)],
 }
 
 _ENV_CACHE = "REPRO_TUNE_CACHE"
@@ -72,9 +74,27 @@ def shape_bucket(shape: Sequence[int]) -> tuple[int, ...]:
     return tuple(1 if d <= 1 else 2 ** math.ceil(math.log2(d)) for d in shape)
 
 
-def cache_key(kernel: str, backend: str, shape: Sequence[int], dtype) -> str:
+def default_impl(backend: str) -> str:
+    """The impl a *real* run on ``backend`` resolves ``auto`` to — the only
+    impl whose timings describe that backend's hardware."""
+    return "kernel" if backend == "tpu" else "interpret"
+
+
+def cache_key(kernel: str, backend: str, shape: Sequence[int], dtype,
+              impl: str | None = None) -> str:
+    """Five-part key ``kernel|backend|impl|bucket|dtype``.
+
+    ``impl`` is the *resolved* execution path the timing was taken under
+    (kernel vs interpret).  Keying by it is what stops backend poisoning:
+    a forced-interpret debug run on a TPU host records
+    ``...|tpu|interpret|...`` entries that a real kernel lookup
+    (``...|tpu|kernel|...``) can never hit.  Unset, it defaults to the
+    backend's real impl (:func:`default_impl`).
+    """
     bucket = "x".join(str(d) for d in shape_bucket(shape))
-    return f"{kernel}|{backend}|{bucket}|{jax.numpy.dtype(dtype).name}"
+    impl = impl or default_impl(backend)
+    return (f"{kernel}|{backend}|{impl}|{bucket}|"
+            f"{jax.numpy.dtype(dtype).name}")
 
 
 class TuningCache:
@@ -95,12 +115,17 @@ class TuningCache:
             if isinstance(raw, dict):
                 # schema-validate each entry too: a hand-edited or
                 # foreign-schema entry must be dropped here, not crash
-                # lookup()/observed_s() in every ops wrapper later
+                # lookup()/observed_s() in every ops wrapper later.
+                # Legacy 4-part keys (pre impl-keying) are dropped rather
+                # than migrated: they can't say whether they were timed
+                # under interpret or the real kernel, which is exactly the
+                # ambiguity that poisoned real-backend calibration.
                 self._entries = {
                     k: v for k, v in raw.get("entries", raw).items()
                     if isinstance(v, dict)
                     and isinstance(v.get("config"), dict)
-                    and isinstance(v.get("median_s"), (int, float))}
+                    and isinstance(v.get("median_s"), (int, float))
+                    and len(k.split("|")) == 5}
         except (OSError, ValueError):
             # missing, unreadable or corrupt cache — start fresh; tuning is
             # an optimisation, never a correctness dependency
@@ -169,18 +194,22 @@ class Autotuner:
     def tune(self, kernel: str, make_call: Callable[[dict], Callable[[], Any]],
              *, shape: Sequence[int], dtype,
              candidates: Iterable[Mapping[str, int]] | None = None,
-             backend: str | None = None, flops: float = 0.0,
+             backend: str | None = None, impl: str | None = None,
+             flops: float = 0.0,
              bytes_moved: float = 0.0, force: bool = False) -> dict:
         """Find (or recall) the fastest config for ``kernel`` at ``shape``.
 
         ``make_call(config)`` returns a zero-arg callable running the kernel
         with that config.  Configs that raise are skipped.  The winning
-        entry — ``{config, median_s, flops, bytes, backend, timed}`` — is
-        persisted; a later call with the same key returns it without any
-        timing (the cache round-trip the benchmarks rely on).
+        entry — ``{config, median_s, flops, bytes, backend, impl, timed}``
+        — is persisted under the impl-resolved key; a later call with the
+        same key returns it without any timing (the cache round-trip the
+        benchmarks rely on).  ``impl`` must be the resolved execution path
+        ``make_call`` actually runs (defaults to the backend's real impl).
         """
         backend = backend or jax.default_backend()
-        key = cache_key(kernel, backend, shape, dtype)
+        impl = impl or default_impl(backend)
+        key = cache_key(kernel, backend, shape, dtype, impl)
         if not force:
             hit = self.cache.get(key)
             if hit is not None:
@@ -203,20 +232,24 @@ class Autotuner:
                 f"autotune({kernel}): no candidate ran for shape "
                 f"{tuple(shape)}") from last_exc
         entry = {"config": best_cfg, "median_s": best_t, "flops": flops,
-                 "bytes": bytes_moved, "backend": backend, "timed": timed}
+                 "bytes": bytes_moved, "backend": backend, "impl": impl,
+                 "timed": timed}
         self.cache.put(key, entry)
         return entry
 
     # -- consultation (cache-only: safe at trace time) -------------------------
     def lookup(self, kernel: str, shape: Sequence[int], dtype,
-               backend: str | None = None) -> dict | None:
-        """Tuned config for (kernel, backend, bucket, dtype), or None."""
+               backend: str | None = None,
+               impl: str | None = None) -> dict | None:
+        """Tuned config for (kernel, backend, impl, bucket, dtype), or
+        None.  Interpret-tuned configs never answer a kernel lookup."""
         backend = backend or jax.default_backend()
-        entry = self.cache.get(cache_key(kernel, backend, shape, dtype))
+        entry = self.cache.get(cache_key(kernel, backend, shape, dtype,
+                                         impl))
         return dict(entry["config"]) if entry else None
 
     def observed_s(self, kernel: str, shape: Sequence[int], dtype,
-                   backend: str | None = None,
+                   backend: str | None = None, impl: str | None = None,
                    nearest: bool = False) -> float | None:
         """Measured median seconds for the tuned config, or None.
 
@@ -227,7 +260,9 @@ class Autotuner:
         whatever bucket their size hits (n=2709 buckets to 4096, the tune
         at 2048 would otherwise never be consulted)."""
         backend = backend or jax.default_backend()
-        entry = self.cache.get(cache_key(kernel, backend, shape, dtype))
+        impl = impl or default_impl(backend)
+        entry = self.cache.get(cache_key(kernel, backend, shape, dtype,
+                                         impl))
         if entry is not None:
             return float(entry["median_s"])
         if not nearest:
@@ -237,11 +272,12 @@ class Autotuner:
         best = None
         for key, e in self.cache.load().items():
             parts = key.split("|")
-            if (len(parts) != 4 or parts[0] != kernel
-                    or parts[1] != backend or parts[3] != dtype_name):
+            if (len(parts) != 5 or parts[0] != kernel
+                    or parts[1] != backend or parts[2] != impl
+                    or parts[4] != dtype_name):
                 continue
             try:
-                bucket = tuple(int(d) for d in parts[2].split("x"))
+                bucket = tuple(int(d) for d in parts[3].split("x"))
             except ValueError:
                 continue
             if len(bucket) != len(want):
@@ -289,15 +325,22 @@ def calibrated_cost_params(base=None, tuner: Autotuner | None = None,
     prices jobs with what this machine was *measured* to deliver.  Entries
     from other backends are ignored — the cache is persistent and shared,
     and e.g. TPU rates would collapse the compute term of a CPU run to
-    nothing.  With no usable entries ``base`` is returned as-is.
+    nothing.  Entries recorded under an impl other than the backend's real
+    one (:func:`default_impl`) are ignored too: a forced-interpret debug
+    run on a TPU host times the Pallas *interpreter*, not the hardware,
+    and would poison the calibration the same way a foreign backend
+    would.  With no usable entries ``base`` is returned as-is.
     """
     from repro.core.scheduler import CostModelParams
     base = base or CostModelParams()
     tuner = tuner or get_tuner()
     backend = backend or jax.default_backend()
+    want_impl = default_impl(backend)
     peak, bw = 0.0, 0.0
     for entry in tuner.cache.load().values():
         if entry.get("backend") != backend:
+            continue
+        if entry.get("impl") != want_impl:
             continue
         t = float(entry.get("median_s") or 0.0)
         if t <= 0:

@@ -124,7 +124,9 @@ def make_scheduler(cfg, params, args, *, sp: SamplingParams,
                           page_size=args.page_size,
                           num_pages=args.num_pages,
                           prefill_chunk=args.prefill_chunk,
-                          mesh=mesh)
+                          mesh=mesh,
+                          attn_impl=getattr(args, "paged_attn_impl",
+                                            "auto"))
     else:
         eng = Engine(cfg, params, batch=args.batch, max_len=max_len)
     tracker = None
@@ -227,6 +229,7 @@ def replay_trace(sched, reqs) -> tuple:
         "n_failed": sched.n_failed,
         "group_failovers": sched.n_group_failovers,
         "group_rejoins": sched.n_group_rejoins,
+        "rejoin_backoff_s": sched.rejoin_backoff_s,
         "suspended_rids": sorted(sched._suspended),
     }
     snap = (rate, results, wall, sched.occupancy, sched.queue.n_rejected,
@@ -410,6 +413,11 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=64,
                     help="paged: prompt chunk length interleaved with "
                          "decode steps (multiple of --page-size)")
+    ap.add_argument("--paged-attn-impl", default="auto",
+                    choices=["auto", "kernel", "interpret", "ref"],
+                    help="paged: decode attention impl — auto runs the "
+                         "paged flash-decode Pallas kernel on TPU and the "
+                         "gather_pages path elsewhere")
     ap.add_argument("--reserve", choices=["lifetime", "demand"],
                     default="lifetime",
                     help="paged: reserve a request's full prompt+budget "

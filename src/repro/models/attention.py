@@ -163,17 +163,31 @@ def gather_pages(pool, page_table):
     b lives in physical page ``page_table[b, i]``.  Returns
     ([G,] B, KV, n_pages*page_size, D), the same layout dense caches use, so
     every attention path downstream is layout-agnostic.  The gather
-    materialises the view (the TPU kernel route would index pages inside the
+    materialises the view (the TPU kernel route indexes pages inside the
     kernel instead); positions past a slot's ``kv_len`` may contain stale
     data from freed pages — they are masked to NEG_INF before the softmax
     exactly like the zero tail of a dense cache, so results are unaffected.
+
+    Trash-page contract (shared with the paged_attention kernel's index
+    map): table entry 0 is the engine's reserved trash page — free slots
+    and the not-yet-written tail of a mid-prefill slot point there, and
+    mid-prefill chunk writes land in it, so its CONTENTS are arbitrary
+    concurrent garbage.  Rows gathered from page 0 are zeroed here rather
+    than trusted to the kv_len mask alone: a mid-prefill slot's kv_len
+    covers positions whose pages are still 0, and zeros reproduce the
+    dense cache's zero tail bit-for-bit (exp(0-m) terms in the softmax
+    denominator and 0·v in the numerator), where garbage would not.
     """
     if pool.ndim == 5:
         g = pool[:, page_table]                  # (G, B, n, KV, ps, D)
+        g = jnp.where((page_table == 0)[None, :, :, None, None, None],
+                      jnp.zeros((), g.dtype), g)
         G, B, n, KV, ps, D = g.shape
         out = g.transpose(0, 1, 3, 2, 4, 5).reshape(G, B, KV, n * ps, D)
         return logical(out, None, "slots", "kv_heads", None, None)
     g = pool[page_table]                         # (B, n, KV, ps, D)
+    g = jnp.where((page_table == 0)[:, :, None, None, None],
+                  jnp.zeros((), g.dtype), g)
     B, n, KV, ps, D = g.shape
     out = g.transpose(0, 2, 1, 3, 4).reshape(B, KV, n * ps, D)
     return logical(out, "slots", "kv_heads", None, None)
@@ -337,7 +351,7 @@ def attention(cfg: ModelConfig, p: dict, x, *, positions, kv_x=None,
               kv_positions=None, causal: bool = True,
               window: int | None = None, cache: dict | None = None,
               cache_len=None, impl: str = "auto",
-              rope: bool | None = None,
+              rope: bool | None = None, paged_impl: str = "ref",
               chunk_continue: bool = False) -> tuple[jax.Array, dict | None]:
     """Full attention layer: qkv proj -> rope -> core -> out proj.
 
@@ -346,9 +360,14 @@ def attention(cfg: ModelConfig, p: dict, x, *, positions, kv_x=None,
     ``kv_x``: cross-attention (whisper decoder) — keys/values from encoder.
     ``chunk_continue``: S > 1 with a *live* cache — chunked prefill: the
     chunk attends over prior cache entries (< ``cache_len``) plus itself.
-    Paged caches never reach this layer: the serving engine gathers per-slot
-    views (``gather_pages``) into the dense (B, KV, T, D) layout before the
-    block runs, so reads here are layout-agnostic and writes stay deltas.
+    Paged caches reach this layer in one of two forms: on the reference
+    path the serving engine gathers per-slot views (``gather_pages``) into
+    the dense (B, KV, T, D) layout before the block runs, so reads here are
+    layout-agnostic; on the kernel path (``paged_impl`` in
+    kernel/interpret, S == 1) the cache instead carries the raw pools plus
+    the page table (``k_pool``/``v_pool``/``pages``) and the paged
+    flash-decode kernel resolves pages inside its index map — no gather.
+    Writes stay deltas either way.
     """
     cd = jnp.dtype(cfg.compute_dtype)
     B, S, _ = x.shape
@@ -385,12 +404,21 @@ def attention(cfg: ModelConfig, p: dict, x, *, positions, kv_x=None,
             # cache buffer.  The written value is independent of the cache
             # read.  (Write-then-read through the stacked carry was tried
             # and REFUTED: +113% memory term — see EXPERIMENTS.md §Perf.)
-            kt = k.swapaxes(1, 2).astype(cache["k"].dtype)   # (B,KV,S,D)
-            vt = v.swapaxes(1, 2).astype(cache["v"].dtype)
+            k_store = cache.get("k", cache.get("k_pool"))
+            kt = k.swapaxes(1, 2).astype(k_store.dtype)      # (B,KV,S,D)
+            vt = v.swapaxes(1, 2).astype(k_store.dtype)
             # delta marked by key STRUCTURE (k_delta/v_delta) so it survives
             # being scanned out as ys (a bool leaf would get stacked)
             new_cache = {"k_delta": kt, "v_delta": vt}
-            if S == 1:
+            if S == 1 and "k_pool" in cache:
+                # paged kernel path: attend straight against the page pool
+                # through the table — DESIGN.md §15
+                from repro.kernels.paged_attention import ops as pa_ops
+                out = pa_ops.paged_decode_attention(
+                    q, cache["k_pool"], cache["v_pool"], cache["pages"],
+                    jnp.asarray(cache_len), kt, vt, window=window,
+                    impl=paged_impl)
+            elif S == 1:
                 out = _decode_attn_plus_self(
                     q, cache["k"], cache["v"], jnp.asarray(cache_len),
                     kt, vt, window=window)

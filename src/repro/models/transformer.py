@@ -117,7 +117,7 @@ def _window_for(cfg: ModelConfig, kind: str) -> int | None:
 
 def apply_block(cfg: ModelConfig, kind: str, p: dict, x, *, positions,
                 enc_out=None, cache=None, cache_len=None,
-                impl: str = "auto",
+                impl: str = "auto", paged_impl: str = "ref",
                 chunk_continue: bool = False, valid_len=None):
     """Returns (x, new_cache, aux_loss).
 
@@ -125,9 +125,11 @@ def apply_block(cfg: ModelConfig, kind: str, p: dict, x, *, positions,
     block continues from the cache (attention over prior entries + itself;
     SSM from the cached conv tail + state) instead of starting fresh.
     ``valid_len``: true (unpadded) length of a bucketed prompt chunk.
-    Paged serving engines pass attention caches as pre-gathered per-slot
-    VIEWS in the dense layout (see ``decode_step``) — this function never
-    sees a page table.
+    Paged serving engines pass attention caches either as pre-gathered
+    per-slot VIEWS in the dense layout (reference path, see
+    ``decode_step``) or — on the paged-kernel decode path — as raw pools
+    plus the page table under ``k_pool``/``v_pool``/``pages``, which the
+    attention layer hands to the paged flash-decode kernel.
     """
     aux = jnp.zeros((), jnp.float32)
     new_cache = cache
@@ -157,6 +159,7 @@ def apply_block(cfg: ModelConfig, kind: str, p: dict, x, *, positions,
     out, new_sa = attention(cfg, p["attn"], h, positions=positions,
                             causal=causal, window=window, cache=sa_cache,
                             cache_len=cache_len, impl=impl,
+                            paged_impl=paged_impl,
                             chunk_continue=chunk_continue,
                             rope=cfg.use_rope and kind != "enc" and kind != "dec")
     x = x + logical(out, "batch", "seq", "embed")
@@ -438,6 +441,25 @@ def _page_views(block_caches, pages):
     return tuple(_page_view_block(bc, pages) for bc in block_caches)
 
 
+def _page_pool_view_block(block_cache, pages, *, stacked: bool):
+    """Kernel-path counterpart of ``_page_view_block``: instead of
+    materialising the gathered dense view, pass the raw pools through with
+    the page table alongside (``k_pool``/``v_pool``/``pages``) so the paged
+    flash-decode kernel resolves pages inside its BlockSpec index map.  For
+    stacked (group-scanned) caches the table is broadcast over the layer
+    axis so the scan slices it back out per layer — a (G, B, n_pages) int32
+    broadcast, trivially small next to the gather it replaces."""
+    if pages is None or not (isinstance(block_cache, dict)
+                             and "self" in block_cache):
+        return block_cache
+    sp = block_cache["self"]
+    pg = pages
+    if stacked:
+        pg = jnp.broadcast_to(pages, (sp["k"].shape[0],) + pages.shape)
+    return {**block_cache,
+            "self": {"k_pool": sp["k"], "v_pool": sp["v"], "pages": pg}}
+
+
 def _apply_cache_update(old_layer_cache, upd, pos, *, pages=None,
                         page_size=None, update_mask=None):
     """Apply a block's cache update to an UNSTACKED layer cache."""
@@ -566,12 +588,17 @@ def init_paged_cache(cfg: ModelConfig, batch: int, *, num_pages: int,
 def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens, *,
                 enc_out=None, embeds=None, impl: str = "auto",
                 pages=None, page_size: int | None = None, valid_len=None,
-                update_mask=None):
+                update_mask=None, paged_impl: str = "ref"):
     """One cache-extending step.  tokens: (B, S) int32 (or embeds (B,S,d));
     S == 1 is decode, S > 1 is batched prefill (cache must be fresh).
     ``pages``/``page_size``: the cache's attention buffers are shared page
     pools; reads gather per-slot views through the page table, writes
-    scatter through it.  ``valid_len``: true prompt length of a bucketed
+    scatter through it.  ``paged_impl``: resolved through
+    ``resolve_paged_impl`` — on ``kernel``/``interpret`` the S == 1 decode
+    path skips the gather entirely and the paged flash-decode kernel
+    indexes the pools through the page table (DESIGN.md §15); ``ref``
+    (and ``auto`` off-TPU) keeps ``gather_pages`` as the oracle path.
+    ``valid_len``: true prompt length of a bucketed
     (right-padded) prefill — masks SSM state updates past the true end.
     ``update_mask`` (B,) bool: freeze the per-slot SSM state of masked-out
     slots (mid-prefill slots under chunk interleaving).
@@ -604,6 +631,10 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens, *,
     # read-only xs (no while-carry copy hazards), per-layer updates come out
     # as small delta ys, and ONE batched dynamic-update-slice per cache
     # applies them afterwards into the donated input buffers.
+    from repro.kernels.paged_attention import resolve_paged_impl
+    use_paged_kernel = (pages is not None and S == 1
+                        and resolve_paged_impl(paged_impl) != "ref")
+
     def group_body(carry, xs):
         h = carry
         gparams, gcache = xs
@@ -614,6 +645,7 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens, *,
             h, nc, _ = apply_block(cfg, kind, p, h, positions=positions,
                                    enc_out=enc_out, cache=gcache[i],
                                    cache_len=pos, impl=impl,
+                                   paged_impl=paged_impl,
                                    valid_len=valid_len)
             updates.append(nc)
         return h, tuple(updates)
@@ -623,9 +655,17 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens, *,
     # paged: gather each slot's pages into dense-layout K/V views ONCE per
     # pattern (outside the layer scan — the stacked gather covers every
     # group), so the blocks read a view indistinguishable from a dense
-    # cache; writes go through the page table into the pools afterwards
-    read_gcaches = _page_views(gcaches, pages)
-    read_tail = [_page_view_block(bc, pages) for bc in cache["tail"]]
+    # cache; writes go through the page table into the pools afterwards.
+    # On the paged-kernel decode path no view is materialised at all: the
+    # pools pass straight through and the kernel's index map IS the gather.
+    if use_paged_kernel:
+        read_gcaches = tuple(_page_pool_view_block(bc, pages, stacked=True)
+                             for bc in gcaches)
+        read_tail = [_page_pool_view_block(bc, pages, stacked=False)
+                     for bc in cache["tail"]]
+    else:
+        read_gcaches = _page_views(gcaches, pages)
+        read_tail = [_page_view_block(bc, pages) for bc in cache["tail"]]
     if jax.tree.leaves(groups):
         n_groups = jax.tree.leaves(groups)[0].shape[0]
         if cfg.scan_layers and n_groups > 1:
@@ -652,7 +692,8 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens, *,
         x, nc, _ = apply_block(cfg, kind, params["tail"][i], x,
                                positions=positions, enc_out=enc_out,
                                cache=read_tail[i], cache_len=pos,
-                               impl=impl, valid_len=valid_len)
+                               impl=impl, paged_impl=paged_impl,
+                               valid_len=valid_len)
         new_tail.append(_apply_cache_update(cache["tail"][i], nc, pos,
                                             pages=pages, page_size=page_size,
                                             update_mask=update_mask))

@@ -355,7 +355,7 @@ class PagedEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch: int, max_len: int,
                  page_size: int = 16, num_pages: int | None = None,
                  prefill_chunk: int = 64, donate_cache: bool = True,
-                 mesh=None):
+                 mesh=None, attn_impl: str = "auto"):
         if cfg.family == "encdec":
             raise NotImplementedError("paged serving for encdec models "
                                       "(cross-attention buffers)")
@@ -365,6 +365,11 @@ class PagedEngine:
         self.cfg, self.params = cfg, params
         self.batch, self.max_len = batch, max_len
         self.page_size = page_size
+        # paged flash-decode attention impl (DESIGN.md §15): "auto" runs
+        # the Pallas kernel on TPU and the gather_pages oracle elsewhere;
+        # "interpret" forces the kernel body through the Pallas interpreter
+        # (tests), "ref" pins the gather path
+        self.attn_impl = attn_impl
         self.chunk_len = prefill_chunk
         self.max_pages = -(-max_len // page_size)       # per-slot table width
         # default pool: the dense engine's footprint (batch × max_len) plus
@@ -397,7 +402,8 @@ class PagedEngine:
         def _decode(params, cache, tokens, page_table, update_mask):
             self._trace_counts["decode"] += 1
             return decode_step(cfg, params, cache, tokens, pages=page_table,
-                               page_size=page_size, update_mask=update_mask)
+                               page_size=page_size, update_mask=update_mask,
+                               paged_impl=attn_impl)
 
         def _chunk(params, cache, tokens, pages_row, slot, start, valid_len):
             self._trace_counts["chunk_prefill"] += 1

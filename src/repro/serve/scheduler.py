@@ -402,6 +402,15 @@ class DeviceGroup:
     healthy: bool = True
     watchdog_trips: int = 0
     down_step: int = 0
+    # flaky-group rejoin backoff (ROADMAP 5c): the probe interval for this
+    # group is ``probe_interval_steps * probe_backoff``.  The multiplier
+    # doubles (capped at ``rejoin_backoff_cap``) on every failed probe and
+    # on every re-failure shortly after a rejoin, so a flapping group stops
+    # soaking the scheduler in constant-cadence probe/evict churn; it
+    # resets once the group fails fresh after a long stable stretch.
+    probe_backoff: int = 1
+    up_step: int = 0          # step_calls stamp of the last rejoin
+    backoff_wall: float | None = None   # clock stamp of the last re-arm
 
     @property
     def page_lo(self) -> int:
@@ -710,6 +719,7 @@ class ServeScheduler:
                  watchdog_budget_s: float | None = None,
                  unhealthy_after: int = 3,
                  probe_interval_steps: int = 5,
+                 rejoin_backoff_cap: int = 16,
                  max_restarts: int | None = None,
                  chaos: Any = None):
         if reserve not in ("lifetime", "demand"):
@@ -725,6 +735,9 @@ class ServeScheduler:
         if probe_interval_steps < 1:
             raise ValueError(f"probe_interval_steps {probe_interval_steps} "
                              f"must be >= 1")
+        if rejoin_backoff_cap < 1:
+            raise ValueError(f"rejoin_backoff_cap {rejoin_backoff_cap} must "
+                             f"be >= 1 (1 disables the backoff)")
         if max_restarts is not None and max_restarts < 0:
             raise ValueError(f"max_restarts {max_restarts} must be >= 0 "
                              f"(None = unlimited)")
@@ -845,6 +858,7 @@ class ServeScheduler:
         self.watchdog_budget_s = watchdog_budget_s
         self.unhealthy_after = unhealthy_after
         self.probe_interval_steps = probe_interval_steps
+        self.rejoin_backoff_cap = rejoin_backoff_cap
         self.max_restarts = max_restarts
         self.chaos = chaos
         self.outcomes: dict[int, RequestOutcome] = {}
@@ -854,6 +868,9 @@ class ServeScheduler:
         self.n_failed = 0
         self.n_group_failovers = 0
         self.n_group_rejoins = 0
+        # wall-clock seconds unhealthy groups spent waiting for their next
+        # probe — grows with the backoff multiplier when a group flaps
+        self.rejoin_backoff_s = 0.0
         # tokens from completed requests that met every declared deadline —
         # the numerator of the serve_overload goodput metric
         self.goodput_tokens = 0
@@ -1704,12 +1721,23 @@ class ServeScheduler:
         a quarantined group must own ZERO outstanding pages.  Returns the
         number of evicted requests.  The group rejoins via
         :meth:`probe_group`, attempted automatically every
-        ``probe_interval_steps`` scheduler calls."""
+        ``probe_interval_steps * probe_backoff`` scheduler calls."""
         g = self.groups[gid]
         if not g.healthy:
             return 0
         g.healthy = False
         g.down_step = self.step_calls
+        # flaky-group backoff (ROADMAP 5c): failing again shortly after a
+        # rejoin doubles the probe interval (capped) instead of flapping at
+        # constant cadence; a long stable stretch forgives the history and
+        # a fresh incident starts back at the base cadence.
+        stable_steps = self.probe_interval_steps * self.rejoin_backoff_cap
+        if g.up_step and self.step_calls - g.up_step < stable_steps:
+            g.probe_backoff = min(g.probe_backoff * 2,
+                                  self.rejoin_backoff_cap)
+        else:
+            g.probe_backoff = 1
+        g.backoff_wall = self.clock()
         n = 0
         for slot in g.slot_ids:
             st = self.slots[slot]
@@ -1736,14 +1764,24 @@ class ServeScheduler:
         injected fault still active?), a real device round-trip through the
         engine, and the quarantine invariant (allocator fully drained).  On
         success the group rejoins admission with its trip counter cleared;
-        on failure the probe interval re-arms."""
+        on failure the probe interval re-arms and the backoff multiplier
+        doubles (capped at ``rejoin_backoff_cap``), so a dead group is
+        probed exponentially less often instead of at constant cadence."""
         g = self.groups[gid]
         if g.healthy:
             return True
+        if g.backoff_wall is not None:
+            # close the waiting window opened at the last re-arm: this is
+            # the rejoin_backoff_s stat FakeClock soaks assert against
+            self.rejoin_backoff_s += self.clock() - g.backoff_wall
+            g.backoff_wall = None
         if ((self.chaos is not None
              and not self.chaos.group_healthy(self, gid))
                 or not self.engine.probe_device()):
             g.down_step = self.step_calls
+            g.probe_backoff = min(g.probe_backoff * 2,
+                                  self.rejoin_backoff_cap)
+            g.backoff_wall = self.clock()
             return False
         if g.allocator is not None and g.allocator.n_outstanding:
             raise RuntimeError(
@@ -1751,13 +1789,14 @@ class ServeScheduler:
                 f"pages leaked while quarantined")
         g.healthy = True
         g.watchdog_trips = 0
+        g.up_step = self.step_calls
         self.n_group_rejoins += 1
         return True
 
     def _probe_groups(self) -> None:
         for g in self.groups:
             if (not g.healthy and self.step_calls - g.down_step
-                    >= self.probe_interval_steps):
+                    >= self.probe_interval_steps * g.probe_backoff):
                 self.probe_group(g.gid)
 
     # -- step watchdog (DESIGN.md §14) -----------------------------------------
@@ -1945,6 +1984,7 @@ class ServeScheduler:
         self.n_failed = 0
         self.n_group_failovers = 0
         self.n_group_rejoins = 0
+        self.rejoin_backoff_s = 0.0
         self.goodput_tokens = 0
         self._last_retire_s = None
         # _ewma_step_s / _ewma_retire_s survive, like the group EWMAs —

@@ -258,3 +258,104 @@ def test_jacobi_iteration_converges():
     for _ in range(500):
         x = jacobi_sweep(A, x, b, d, impl="ref")
     np.testing.assert_allclose(np.asarray(x), x_true, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged flash-decode attention
+# ---------------------------------------------------------------------------
+
+def _paged_case(key, B, H, KV, D, page_size, n_slot_pages, kv_lens, *,
+                share=False, trash_tail=0):
+    """Build a pool + page table exercising the serve layouts: ragged
+    lengths, trailing trash-page entries, optionally slots SHARING physical
+    pages (the prefix-cache / COW refcount>1 read case — DESIGN.md §11) and
+    mid-prefill slots whose last ``trash_tail`` in-range logical pages still
+    point at trash page 0.  Page 0 is filled with NaN: the masking contract
+    says its contents must never reach an output."""
+    ks = jax.random.split(key, 5)
+    n_pool = 1 + B * n_slot_pages
+    k_pool = jax.random.normal(ks[0], (n_pool, KV, page_size, D), jnp.float32)
+    v_pool = jax.random.normal(ks[1], (n_pool, KV, page_size, D), jnp.float32)
+    k_pool = k_pool.at[0].set(jnp.nan)
+    v_pool = v_pool.at[0].set(jnp.nan)
+    table = np.zeros((B, n_slot_pages), np.int32)
+    nxt = 1
+    for b, L in enumerate(kv_lens):
+        need = -(-max(int(L), 1) // page_size)
+        for i in range(need):
+            if share and b > 0 and i == 0:
+                table[b, i] = table[0, 0]      # shared prefix page
+            else:
+                table[b, i] = nxt
+                nxt += 1
+        for i in range(max(need - trash_tail, 0), need):
+            table[b, i] = 0                    # mid-prefill: unwritten page
+    q = jax.random.normal(ks[2], (B, 1, H, D), jnp.float32)
+    kt = jax.random.normal(ks[3], (B, KV, 1, D), jnp.float32)
+    vt = jax.random.normal(ks[4], (B, KV, 1, D), jnp.float32)
+    return q, k_pool, v_pool, jnp.asarray(table), \
+        jnp.asarray(kv_lens, jnp.int32), kt, vt
+
+
+PA_CASES = [
+    # B, H, KV, D, page_size, n_slot_pages, kv_lens, window, share, trash
+    (3, 4, 2, 64, 8, 4, (5, 17, 0), None, False, 0),
+    (2, 8, 8, 64, 16, 3, (31, 16), None, False, 0),
+    (4, 4, 4, 32, 8, 6, (40, 23, 8, 1), 11, False, 0),
+    (3, 2, 2, 64, 16, 4, (33, 33, 50), None, True, 0),   # shared/COW pages
+    (2, 4, 2, 32, 8, 5, (37, 21), None, False, 1),       # mid-prefill trash
+    (2, 4, 1, 64, 16, 2, (9, 25), 7, True, 0),
+]
+
+
+@pytest.mark.parametrize("case", PA_CASES)
+@pytest.mark.parametrize("head_block", [1, 2])
+def test_paged_attention_kernel_matches_ref(case, head_block):
+    from repro.kernels.paged_attention.ops import paged_decode_attention
+    B, H, KV, D, ps, n, lens, window, share, trash = case
+    if head_block > KV:
+        pytest.skip("head_block exceeds KV heads")
+    q, kp, vp, tbl, kv_len, kt, vt = _paged_case(
+        KEYS[3], B, H, KV, D, ps, n, lens, share=share, trash_tail=trash)
+    ref = paged_decode_attention(q, kp, vp, tbl, kv_len, kt, vt,
+                                 window=window, impl="ref")
+    out = paged_decode_attention(q, kp, vp, tbl, kv_len, kt, vt,
+                                 window=window, impl="interpret",
+                                 head_block=head_block)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-6, rtol=2e-6)
+
+
+@pytest.mark.parametrize("case", PA_CASES[:4])
+def test_paged_attention_matches_models_gather_oracle(case):
+    """Kernel vs the MODELS-level path it replaces: gather_pages (dense
+    view materialisation, trash rows zeroed) + _decode_attn_plus_self.
+    This pins the cross-layer contract, not just the in-package ref."""
+    from repro.kernels.paged_attention.ops import paged_decode_attention
+    from repro.models.attention import _decode_attn_plus_self, gather_pages
+    B, H, KV, D, ps, n, lens, window, share, trash = case
+    q, kp, vp, tbl, kv_len, kt, vt = _paged_case(
+        KEYS[4], B, H, KV, D, ps, n, lens, share=share, trash_tail=trash)
+    kc = gather_pages(kp, tbl)
+    vc = gather_pages(vp, tbl)
+    want = _decode_attn_plus_self(q, kc, vc, kv_len, kt, vt, window=window)
+    got = paged_decode_attention(q, kp, vp, tbl, kv_len, kt, vt,
+                                 window=window, impl="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_paged_attention_all_trash_slot_is_finite():
+    """A free slot (kv_len 0, whole table row on the NaN-poisoned trash
+    page) must produce the degenerate self-only answer, not NaN."""
+    from repro.kernels.paged_attention.ops import paged_decode_attention
+    q, kp, vp, tbl, kv_len, kt, vt = _paged_case(
+        KEYS[5], 2, 4, 2, 32, 8, 3, (0, 0))
+    for impl in ("ref", "interpret"):
+        out = np.asarray(paged_decode_attention(q, kp, vp, tbl, kv_len,
+                                                kt, vt, impl=impl))
+        assert np.isfinite(out).all()
+        # kv_len 0 -> softmax collapses onto the self term: out == vt
+        want = np.repeat(np.asarray(vt)[:, :, 0, :], 4 // 2, axis=1)
+        np.testing.assert_allclose(out[:, 0], want, atol=1e-6, rtol=1e-6)

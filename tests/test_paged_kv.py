@@ -257,6 +257,49 @@ def test_dense_insert_masks_ssm_padding():
                                atol=1e-4, rtol=1e-4)
 
 
+def test_gather_pages_masks_trash_page_garbage(qwen):
+    """Regression for the trash-page contract (DESIGN.md §15): table entry
+    0 is the reserved trash page — free slots, the unwritten tail of every
+    slot's table row, and mid-prefill chunk writes all point there, so its
+    contents are arbitrary.  ``gather_pages`` must ZERO rows gathered from
+    page 0 rather than trust the kv_len mask alone: mask-by-addition turns
+    NaN/Inf garbage into NaN scores that survive the softmax even at
+    masked positions.  Logits-level, bit-exact — the clean and the
+    NaN-poisoned pool must decode identically."""
+    cfg, params = qwen
+    rng = np.random.default_rng(11)
+    prompt = _prompt(rng, cfg, 6)
+
+    def run(poison):
+        eng = PagedEngine(cfg, params, batch=2, max_len=64, page_size=8,
+                          prefill_chunk=16)
+        alloc = PageAllocator(eng.num_pages)
+        pages = alloc.alloc(eng.pages_needed(len(prompt), 4))
+        lg = eng.insert(0, prompt, page_ids=pages, max_new=4)
+        if poison:
+            for part in ("groups", "tail"):
+                for bc in eng.cache[part]:
+                    if isinstance(bc, dict) and "self" in bc:
+                        for key in ("k", "v"):
+                            pool = bc["self"][key]
+                            idx = ((slice(None), 0) if pool.ndim == 5
+                                   else (0,))
+                            bc["self"][key] = pool.at[idx].set(jnp.nan)
+        tok = np.array([[int(jnp.argmax(lg[0, -1]))], [0]], np.int32)
+        out = []
+        for _ in range(3):
+            lg = eng.decode(jnp.asarray(tok),
+                            live_mask=np.array([True, False]))
+            out.append(np.asarray(lg[0]))
+            tok = np.array([[int(jnp.argmax(lg[0, -1]))], [0]], np.int32)
+        return np.stack(out)
+
+    clean, poisoned = run(False), run(True)
+    assert np.isfinite(clean).all()
+    assert np.array_equal(clean, poisoned), \
+        "trash-page garbage leaked into decode logits"
+
+
 # ---------------------------------------------------------------------------
 # Scheduler: admission by pages, bounded compiles, batched placement
 # ---------------------------------------------------------------------------

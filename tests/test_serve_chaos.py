@@ -31,6 +31,7 @@ import os
 
 import jax
 import numpy as np
+import pytest
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
@@ -356,6 +357,67 @@ def test_failed_group_quarantine_holds_until_probe():
     assert sched.groups[1].healthy and sched.n_group_rejoins == 1
     _assert_outcome_coverage(sched, 4)
     _assert_no_leaks(sched)
+
+
+def test_flaky_group_rejoin_backoff():
+    """ROADMAP 5c: a group that flaps — rejoins, then fails again shortly
+    after — is probed at exponentially growing intervals, capped at
+    ``rejoin_backoff_cap``; a long stable stretch forgives the history.
+    ``rejoin_backoff_s`` accumulates the (FakeClock) seconds groups spend
+    down waiting between probes."""
+    clock = FakeClock()
+    sched = _sched(device_groups=2, probe_interval_steps=2,
+                   rejoin_backoff_cap=8, clock=clock)
+
+    def steps_to_rejoin():
+        n = 0
+        while not sched.groups[1].healthy:
+            clock.t += 1.0
+            sched.step()
+            n += 1
+            assert n < 200, "group never rejoined"
+        return n
+
+    # first incident probes at the base cadence (multiplier 1)
+    sched.fail_group(1, reason="flap")
+    assert sched.groups[1].probe_backoff == 1
+    assert steps_to_rejoin() == 2
+    # immediate re-failures double the interval: 2 -> 4 -> 8, capped at 8
+    for expect in (2, 4, 8, 8):
+        sched.fail_group(1, reason="flap")
+        assert sched.groups[1].probe_backoff == expect
+        assert steps_to_rejoin() == 2 * expect
+    # each down stretch waited 1s per step on the FakeClock
+    assert sched.rejoin_backoff_s == pytest.approx(2 * (1 + 2 + 4 + 8 + 8))
+    # a stable stretch of probe_interval_steps * cap calls resets the
+    # multiplier: the next incident is fresh, back at base cadence
+    for _ in range(2 * 8):
+        sched.step()
+    sched.fail_group(1, reason="fresh")
+    assert sched.groups[1].probe_backoff == 1
+    assert steps_to_rejoin() == 2
+    assert sched.n_group_rejoins == 6
+    _assert_no_leaks(sched)
+
+
+def test_dead_group_probes_back_off_exponentially():
+    """A group whose probes KEEP failing is probed exponentially less
+    often — constant-cadence probing of a dead device was the 5c bug."""
+    chaos = ServeChaosInjector(kill_group=(1, 2, 50))
+    sched = _sched(device_groups=2, probe_interval_steps=2,
+                   rejoin_backoff_cap=8, chaos=chaos)
+    n = 0
+    while not all(g.healthy for g in sched.groups) or sched.step_calls < 3:
+        sched.step()
+        n += 1
+        assert n < 200, "group never rejoined"
+    # failed probes at calls 4, 8, 16, 32, 48 double the multiplier to the
+    # cap; the fault lifts at call 52 and the NEXT backed-off probe (call
+    # 64) rejoins — 6 probe attempts where constant cadence would make 31
+    assert sched.step_calls == 64
+    assert sched.groups[1].probe_backoff == 8
+    assert chaos.n_kills == 1 and sched.n_group_rejoins == 1
+    _assert_no_leaks(sched, chaos)
 
 
 # -- allocator pressure ----------------------------------------------------

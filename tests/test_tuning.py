@@ -90,14 +90,32 @@ def test_schema_corrupt_entries_are_dropped(tmp_path):
     path = tmp_path / "t.json"
     good = {"config": {"block": 64}, "median_s": 1e-3}
     path.write_text(json.dumps({"version": 1, "entries": {
-        "k|cpu|256x256|float32": {"median": 1},          # wrong keys
-        "k|cpu|512x512|float32": {"config": "x", "median_s": 1e-3},
-        "k|cpu|64x64|float32": good,
+        "k|cpu|interpret|256x256|float32": {"median": 1},    # wrong keys
+        "k|cpu|interpret|512x512|float32": {"config": "x", "median_s": 1e-3},
+        "k|cpu|interpret|64x64|float32": good,
     }}))
     tuner = Autotuner(TuningCache(str(path)))
     assert tuner.lookup("k", (256, 256), jnp.float32, backend="cpu") is None
     assert tuner.observed_s("k", (512, 512), jnp.float32, backend="cpu") is None
     assert tuner.lookup("k", (64, 64), jnp.float32, backend="cpu") == good["config"]
+
+
+def test_legacy_four_part_keys_dropped_on_load(tmp_path):
+    """Pre-impl-keying cache entries (4-part keys) can't say whether they
+    were timed under interpret or the real kernel — they are dropped at
+    load, never migrated into either impl's namespace."""
+    path = tmp_path / "t.json"
+    legacy = {"config": {"block": 64}, "median_s": 1e-3, "backend": "cpu"}
+    path.write_text(json.dumps({"version": 1, "entries": {
+        "k|cpu|64x64|float32": legacy,                       # legacy schema
+        "k|cpu|interpret|64x64|float32": {"config": {"block": 32},
+                                          "median_s": 2e-3},
+    }}))
+    cache = TuningCache(str(path))
+    assert list(cache.load()) == ["k|cpu|interpret|64x64|float32"]
+    tuner = Autotuner(cache)
+    assert tuner.lookup("k", (64, 64), jnp.float32,
+                        backend="cpu") == {"block": 32}
 
 
 def test_unserializable_config_save_is_not_fatal(tmp_path):
@@ -189,21 +207,62 @@ def test_calibrated_cost_params(tmp_path):
     base = calibrated_cost_params(tuner=tuner)     # empty cache -> base
     assert base.peak_flops == 100e9
 
-    cache.put("a|cpu|256x256|float32",
+    cache.put("a|cpu|interpret|256x256|float32",
               {"config": {}, "median_s": 1e-3, "flops": 2e9, "bytes": 4e8,
-               "backend": "cpu"})
-    cache.put("b|cpu|256x256|float32",
+               "backend": "cpu", "impl": "interpret"})
+    cache.put("b|cpu|interpret|256x256|float32",
               {"config": {}, "median_s": 1e-3, "flops": 1e9, "bytes": 8e8,
-               "backend": "cpu"})
+               "backend": "cpu", "impl": "interpret"})
     # a foreign-backend entry must NOT poison the calibration
-    cache.put("c|tpu|256x256|float32",
+    cache.put("c|tpu|kernel|256x256|float32",
               {"config": {}, "median_s": 1e-6, "flops": 2e12, "bytes": 4e11,
-               "backend": "tpu"})
+               "backend": "tpu", "impl": "kernel"})
     p = calibrated_cost_params(tuner=tuner, backend="cpu")
     # best achieved rates across entries
     assert p.peak_flops == pytest.approx(2e9 / 1e-3)
     assert p.mem_bw == pytest.approx(8e8 / 1e-3)
     assert p.link_bw == base.link_bw
+
+
+def test_interpret_entries_cannot_poison_real_backend(tmp_path):
+    """The backend-poisoning regression (ISSUE 10): a cache populated by
+    CPU/interpret runs — or by a forced-interpret debug run ON a TPU host
+    — must not leak block configs or calibration rates into the TPU kernel
+    path.  The interpreter's timings describe the interpreter, not the
+    hardware."""
+    path = tmp_path / "t.json"
+    cache = TuningCache(str(path))
+    # a CPU-interpret tune (what CI machines record) ...
+    cache.put(cache_key("flash_attention", "cpu", (4, 8, 512, 64),
+                        jnp.float32, "interpret"),
+              {"config": {"q_block": 128, "kv_block": 128},
+               "median_s": 3.0, "flops": 1e9, "bytes": 1e8,
+               "backend": "cpu", "impl": "interpret"})
+    # ... and the sneaky variant: forced interpret on a TPU host records
+    # backend="tpu" with garbage (interpreter) timings
+    cache.put(cache_key("flash_attention", "tpu", (4, 8, 512, 64),
+                        jnp.float32, "interpret"),
+              {"config": {"q_block": 256, "kv_block": 256},
+               "median_s": 7.0, "flops": 1e15, "bytes": 1e14,
+               "backend": "tpu", "impl": "interpret"})
+    tuner = Autotuner(cache)
+    # neither entry answers a TPU kernel-path config lookup ...
+    assert tuner.lookup("flash_attention", (4, 8, 512, 64), jnp.float32,
+                        backend="tpu", impl="kernel") is None
+    assert tuner.observed_s("flash_attention", (4, 8, 512, 64), jnp.float32,
+                            backend="tpu", impl="kernel",
+                            nearest=True) is None
+    # ... and neither alters TPU-path calibration (flops/median would give
+    # an absurd 1e15/7 "measured" rate here)
+    base = calibrated_cost_params(tuner=Autotuner(TuningCache(
+        str(tmp_path / "empty.json"))), backend="tpu")
+    p = calibrated_cost_params(tuner=tuner, backend="tpu")
+    assert p.peak_flops == base.peak_flops and p.mem_bw == base.mem_bw
+    # the CPU-interpret entry still serves the CPU path it was timed on
+    assert tuner.lookup("flash_attention", (4, 8, 512, 64), jnp.float32,
+                        backend="cpu") == {"q_block": 128, "kv_block": 128}
+    # and survives the file round-trip under the 5-part schema
+    assert len(TuningCache(str(path)).load()) == 2
 
 
 def test_get_tuner_per_cache_path(tmp_path, monkeypatch):
